@@ -1,0 +1,70 @@
+"""HLO collective profiler: list the largest collectives in a lowered cell
+(per-op shapes + source metadata) — the 'profile' for §Perf hillclimbing.
+
+  PYTHONPATH=src:. python benchmarks/hlo_analysis.py --arch mixtral-8x22b \
+      --shape train_4k --layers 1 --top 15
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import repro.launch.dryrun as DR
+from repro.core.latency import _COLLECTIVE_RE, _first_shape_bytes
+from repro.configs.base import SHAPES_BY_NAME
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import get_config
+
+
+def top_collectives(hlo: str, top: int = 15):
+    rows = []
+    for line in hlo.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m or " = " not in line or "-done" in line:
+            continue
+        b = _first_shape_bytes(line)
+        meta = ""
+        mm = re.search(r'op_name="([^"]+)"', line)
+        if mm:
+            meta = mm.group(1)[-90:]
+        head = line.strip().split(" = ")[1][:60]
+        rows.append((b, m.group(1), head, meta))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--layers", type=int, default=1)
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--deploy-bits", type=int, default=None)
+    ap.add_argument("--cache-bits", type=int, default=16)
+    args = ap.parse_args()
+    mesh = make_production_mesh()
+    cfg = get_config(args.arch)
+    if SHAPES_BY_NAME[args.shape].mode == "train":
+        cfg = cfg.replace(remat="full")
+    cfg = cfg.replace(num_layers=args.layers, scan_layers=False)
+    row, compiled = DR._lower(cfg, SHAPES_BY_NAME[args.shape], mesh,
+                              deploy_bits=args.deploy_bits,
+                              cache_bits=args.cache_bits)
+    print(f"totals/dev: flops={row['flops']:.3e} bytes={row['bytes']:.3e} "
+          f"coll={row['collective_bytes']:.3e}")
+    for b, kind, head, meta in top_collectives(compiled.as_text(),
+                                               args.top):
+        print(f"{b / 1e9:9.3f} GB  {kind:18s} {head}")
+        if meta:
+            print(f"            {meta}")
+
+
+if __name__ == "__main__":
+    main()

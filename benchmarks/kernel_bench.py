@@ -1,0 +1,62 @@
+"""Kernel micro-bench: CPU-interpret timings (plumbing check only — the
+TPU roofline numbers come from the dry-run) + jnp-reference timings."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(verbose=True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, 512))
+    w = jax.random.normal(key, (512, 256))
+    rows.append(("kernel.quant_matmul_int8_cpu_interp",
+                 _time(lambda: ops.quantized_matmul(x, w, 8)),
+                 "256x512x256"))
+    rows.append(("ref.f32_matmul", _time(lambda: (x @ w)), "256x512x256"))
+
+    xx = jax.random.normal(key, (512, 256))
+    rows.append(("kernel.fake_quant_cpu_interp",
+                 _time(lambda: ops.fused_fake_quant(xx, 4)), "512x256 b4"))
+
+    q = jax.random.normal(key, (1, 4, 256, 32))
+    k = jax.random.normal(key, (1, 2, 256, 32))
+    rows.append(("kernel.flash_attn_cpu_interp",
+                 _time(lambda: ops.flash_attention(q, k, k)),
+                 "S=256 H=4 D=32"))
+    rows.append(("ref.attention", _time(
+        lambda: ref.attention_ref(q, k, k)), "S=256 H=4 D=32"))
+
+    a = jax.random.uniform(key, (2, 128, 128), minval=0.5, maxval=0.99)
+    b = jax.random.normal(key, (2, 128, 128))
+    rows.append(("kernel.rglru_scan_cpu_interp",
+                 _time(lambda: ops.rglru_scan(a, b)), "B2 S128 C128"))
+
+    xh = jax.random.normal(key, (1, 128, 4, 16))
+    dA = -jax.random.uniform(key, (1, 128, 4), maxval=0.4)
+    Bm = jax.random.normal(key, (1, 128, 16))
+    rows.append(("kernel.ssd_scan_cpu_interp",
+                 _time(lambda: ops.ssd_scan(xh, dA, Bm, Bm, chunk=32)),
+                 "S128 H4 P16 N16"))
+    if verbose:
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,90 @@
+"""§Roofline table generator: reads the dry-run JSONs and renders the
+per-(arch x shape x mesh) three-term roofline table (deliverable g).
+
+Derived fields are RECOMPUTED here from the raw per-chip counts
+(flops / bytes / collective_bytes / model_flops / chips) so the table is
+independent of the code version that produced a JSON:
+
+    compute_s    = flops_per_chip / peak_bf16
+    memory_s     = bytes_per_chip / hbm_bw
+    collective_s = collective_bytes_per_chip / ici_bw
+    step_s       = max(three terms)
+    useful_ratio = model_flops / (flops_per_chip * chips)
+    roofline_fraction = (model_flops / step_s) / (peak_bf16 * chips)
+
+Known bias (EXPERIMENTS.md §Methodology): the chunked-attention inner scan
+is cost-counted once, so compute_s is a floor for long-context attention
+cells; step_s/dominant are unaffected (those cells are memory/collective
+bound by >10x).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core.latency import V5E
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def derive(r: dict, hw=V5E) -> dict:
+    if "skipped" in r or "error" in r:
+        return r
+    out = dict(r)
+    out["compute_s"] = r["flops"] / hw.peak_bf16
+    out["memory_s"] = r["bytes"] / hw.hbm_bw
+    out["collective_s"] = r["collective_bytes"] / hw.ici_bw
+    terms = {"compute": out["compute_s"], "memory": out["memory_s"],
+             "collective": out["collective_s"]}
+    out["dominant"] = max(terms, key=terms.get)
+    out["step_s"] = max(terms.values())
+    tot = r["flops"] * r["chips"]
+    out["useful_flops_ratio"] = r["model_flops"] / tot if tot else 0.0
+    out["roofline_fraction"] = ((r["model_flops"] / out["step_s"])
+                                / (hw.peak_bf16 * r["chips"])
+                                if out["step_s"] else 0.0)
+    return out
+
+
+def load(mesh: str = "singlepod") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, mesh, "*.json"))):
+        with open(f) as fh:
+            rows.append(derive(json.load(fh)))
+    return rows
+
+
+def render(rows, title="singlepod") -> str:
+    out = [f"## Roofline — {title}",
+           "| arch | shape | compute_s | memory_s | collective_s | dominant"
+           " | step_s | MODEL_FLOPS | useful_ratio | roofline_frac |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skipped: {r['skipped']} | — | — | — | — |")
+        elif "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"ERROR | — | — | — | — |")
+        else:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+                f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+                f"{r['dominant']} | {r['step_s']:.2e} | "
+                f"{r['model_flops']:.2e} | {r['useful_flops_ratio']:.3f} | "
+                f"{r['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+def main(verbose=True):
+    for mesh in ("singlepod", "multipod"):
+        rows = load(mesh)
+        if rows and verbose:
+            print(render(rows, mesh))
+            print()
+    return {m: load(m) for m in ("singlepod", "multipod")}
+
+
+if __name__ == "__main__":
+    main()

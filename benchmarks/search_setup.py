@@ -1,0 +1,66 @@
+"""Search construction shared by the paper-table benchmarks."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import IMG_CTX, SERVE_CTX, get_lm_testbed, \
+    get_resnet_testbed
+from repro.core.compress import CompressibleLM, CompressibleResNet
+from repro.core.ddpg import DDPGConfig
+from repro.core.latency import LatencyContext
+from repro.core.reward import RewardConfig
+from repro.core.search import CompressionSearch, SearchConfig
+from repro.core.sensitivity import run_sensitivity
+
+FULL = os.environ.get("GALEN_BENCH_FULL", "0") == "1"
+
+# paper: 310 (quant) / 410 (prune, joint) episodes, 10 warm-up.
+EPISODES = {"p": 410, "q": 310, "pq": 410} if FULL else \
+    {"p": 60, "q": 50, "pq": 60}
+WARMUP = 10
+UPDATES = 48 if FULL else 24
+
+_sens_cache = {}
+
+
+def lm_search(methods: str, c: float, seed: int = 0, episodes=None,
+              sens_enabled: bool = True) -> CompressionSearch:
+    cfg, params, val, acc = get_lm_testbed()
+    # smaller eval batch: ~2x faster episodes, ±2% accuracy noise (the
+    # paper also validates on a small split during search)
+    val = {k: v[:32] for k, v in val.items()}
+    cm = CompressibleLM(cfg, params)
+    key = ("lm", sens_enabled)
+    if key not in _sens_cache:
+        if sens_enabled:
+            _sens_cache[key] = run_sensitivity(cm, val)
+        else:
+            from repro.core.sensitivity import SensitivityResult
+            _sens_cache[key] = SensitivityResult(
+                {s.name: {} for s in cm.specs})  # constant features
+    scfg = SearchConfig(
+        methods=methods,
+        episodes=episodes or EPISODES[methods],
+        reward=RewardConfig(target_ratio=c, beta=-3.0),
+        ddpg=DDPGConfig(warmup_episodes=WARMUP, updates_per_episode=UPDATES,
+                        batch_size=128, buffer_size=2000),
+        seed=seed)
+    return CompressionSearch(cm, val, scfg, SERVE_CTX,
+                             sens=_sens_cache[key])
+
+
+def resnet_search(methods: str, c: float, seed: int = 0,
+                  episodes=None) -> CompressionSearch:
+    rcfg, params, val, acc = get_resnet_testbed()
+    cm = CompressibleResNet(rcfg, params)
+    if "resnet" not in _sens_cache:
+        _sens_cache["resnet"] = run_sensitivity(cm, val)
+    scfg = SearchConfig(
+        methods=methods,
+        episodes=episodes or EPISODES[methods],
+        reward=RewardConfig(target_ratio=c, beta=-3.0),
+        ddpg=DDPGConfig(warmup_episodes=WARMUP, updates_per_episode=UPDATES,
+                        batch_size=128, buffer_size=2000),
+        seed=seed)
+    return CompressionSearch(cm, val, scfg, IMG_CTX,
+                             sens=_sens_cache["resnet"])

@@ -1,0 +1,6 @@
+from repro.configs.base import (ALL_SHAPES, SHAPES_BY_NAME, ArchConfig,
+                                MoEConfig, ShapeConfig, SSMConfig,
+                                cell_supported)
+
+__all__ = ["ArchConfig", "ShapeConfig", "MoEConfig", "SSMConfig",
+           "ALL_SHAPES", "SHAPES_BY_NAME", "cell_supported"]

@@ -1,0 +1,427 @@
+"""Apply a compression policy to a model: LayerSpec enumeration per
+architecture family, cspec building (quant bits + ℓ1 pruning masks), and
+deployment-time weight slicing.
+
+Two model adapters implement the ``CompressibleModel`` protocol used by the
+search loop: ``CompressibleLM`` (any ArchConfig) and ``CompressibleResNet``
+(the paper's own testbed family).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import pruning
+from repro.core.policy import Policy
+from repro.core.spec import LayerCMP, LayerSpec, effective_bits
+from repro.models import blocks as B
+from repro.models import model as M
+from repro.models import resnet as R
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)
+
+
+def _head_granularity(head_dim: int, lane: int = 128) -> int:
+    return _lcm(lane, head_dim) // head_dim if head_dim else 1
+
+
+# ===========================================================================
+# LayerSpec enumeration for ArchConfig LMs
+# ===========================================================================
+
+def lm_layer_specs(cfg: ArchConfig) -> List[LayerSpec]:
+    specs: List[LayerSpec] = []
+    d = cfg.d_model
+    if cfg.frontend != "audio_stub":
+        specs.append(LayerSpec(
+            name="embed", kind="embed", layer_idx=-1, in_dim=cfg.vocab_size,
+            out_dim=d, quantizable=True, mix_supported=False,
+            weight_elems=cfg.vocab_size * d, act_elems_per_token=1))
+    for i, kind in enumerate(cfg.layer_kinds):
+        if kind == "attn":
+            H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+            specs.append(LayerSpec(
+                name=f"L{i}.attn_qkv", kind="attn_qkv", layer_idx=i,
+                in_dim=d, out_dim=(H + 2 * KV) * hd,
+                prunable=True, prune_dim=H,
+                prune_granularity=_head_granularity(hd),
+                flops_per_token=2.0 * d * (H + 2 * KV) * hd,
+                weight_elems=d * (H + 2 * KV) * hd,
+                act_elems_per_token=d,
+                extra={"head_dim": hd, "kv_heads": KV}))
+            specs.append(LayerSpec(
+                name=f"L{i}.attn_out", kind="attn_out", layer_idx=i,
+                in_dim=H * hd, out_dim=d, dep_group=f"L{i}.heads",
+                flops_per_token=2.0 * H * hd * d,
+                weight_elems=H * hd * d, act_elems_per_token=H * hd))
+            if cfg.moe is not None:
+                E, K, ff = cfg.moe.num_experts, cfg.moe.top_k, cfg.d_ff
+                gated = 2
+                specs.append(LayerSpec(
+                    name=f"L{i}.moe_up", kind="moe_up", layer_idx=i,
+                    in_dim=d, out_dim=ff, prunable=True, prune_dim=ff,
+                    prune_granularity=128,
+                    flops_per_token=2.0 * K * d * ff * gated,
+                    weight_elems=E * d * ff * gated, act_elems_per_token=K * d,
+                    extra={"experts": E, "top_k": K}))
+                specs.append(LayerSpec(
+                    name=f"L{i}.moe_down", kind="moe_down", layer_idx=i,
+                    in_dim=ff, out_dim=d, dep_group=f"L{i}.moe_ff",
+                    flops_per_token=2.0 * K * ff * d,
+                    weight_elems=E * ff * d, act_elems_per_token=K * ff,
+                    extra={"experts": E, "top_k": K}))
+                if cfg.moe.dense_residual:
+                    specs.append(LayerSpec(
+                        name=f"L{i}.dense_up", kind="mlp_up", layer_idx=i,
+                        in_dim=d, out_dim=ff, prunable=True, prune_dim=ff,
+                        prune_granularity=128,
+                        flops_per_token=2.0 * d * ff * gated,
+                        weight_elems=d * ff * gated, act_elems_per_token=d,
+                        extra={"dense_residual": True}))
+                    specs.append(LayerSpec(
+                        name=f"L{i}.dense_down", kind="mlp_down", layer_idx=i,
+                        in_dim=ff, out_dim=d, dep_group=f"L{i}.dense_ff",
+                        flops_per_token=2.0 * ff * d,
+                        weight_elems=ff * d, act_elems_per_token=ff,
+                        extra={"dense_residual": True}))
+            else:
+                ff = cfg.d_ff
+                gated = 2 if cfg.mlp in ("swiglu", "geglu") else 1
+                specs.append(LayerSpec(
+                    name=f"L{i}.mlp_up", kind="mlp_up", layer_idx=i,
+                    in_dim=d, out_dim=ff, prunable=True, prune_dim=ff,
+                    prune_granularity=128,
+                    flops_per_token=2.0 * d * ff * gated,
+                    weight_elems=d * ff * gated, act_elems_per_token=d))
+                specs.append(LayerSpec(
+                    name=f"L{i}.mlp_down", kind="mlp_down", layer_idx=i,
+                    in_dim=ff, out_dim=d, dep_group=f"L{i}.ff",
+                    flops_per_token=2.0 * ff * d,
+                    weight_elems=ff * d, act_elems_per_token=ff))
+        elif kind == "ssm":
+            d_inner, nheads, conv_dim = B.ssm_dims(cfg)
+            d_proj = 2 * d_inner + 2 * cfg.ssm.d_state + nheads
+            specs.append(LayerSpec(
+                name=f"L{i}.ssm_in", kind="ssm_in", layer_idx=i,
+                in_dim=d, out_dim=d_proj, prunable=True, prune_dim=nheads,
+                prune_granularity=_head_granularity(cfg.ssm.head_dim),
+                flops_per_token=2.0 * d * d_proj,
+                weight_elems=d * d_proj, act_elems_per_token=d,
+                extra={"head_dim": cfg.ssm.head_dim,
+                       "d_state": cfg.ssm.d_state}))
+            specs.append(LayerSpec(
+                name=f"L{i}.ssm_out", kind="ssm_out", layer_idx=i,
+                in_dim=d_inner, out_dim=d, dep_group=f"L{i}.ssm_heads",
+                flops_per_token=2.0 * d_inner * d,
+                weight_elems=d_inner * d, act_elems_per_token=d_inner))
+        elif kind == "rglru":
+            w = cfg.lru_width
+            specs.append(LayerSpec(
+                name=f"L{i}.rglru_in", kind="rglru_in", layer_idx=i,
+                in_dim=d, out_dim=2 * w, prunable=True, prune_dim=w,
+                prune_granularity=128,
+                flops_per_token=2.0 * d * 2 * w,
+                weight_elems=d * 2 * w, act_elems_per_token=d))
+            specs.append(LayerSpec(
+                name=f"L{i}.rglru_out", kind="rglru_out", layer_idx=i,
+                in_dim=w, out_dim=d, dep_group=f"L{i}.lru",
+                flops_per_token=2.0 * w * d,
+                weight_elems=w * d, act_elems_per_token=w))
+            ff = cfg.d_ff
+            gated = 2 if cfg.mlp in ("swiglu", "geglu") else 1
+            specs.append(LayerSpec(
+                name=f"L{i}.mlp_up", kind="mlp_up", layer_idx=i,
+                in_dim=d, out_dim=ff, prunable=True, prune_dim=ff,
+                prune_granularity=128,
+                flops_per_token=2.0 * d * ff * gated,
+                weight_elems=d * ff * gated, act_elems_per_token=d))
+            specs.append(LayerSpec(
+                name=f"L{i}.mlp_down", kind="mlp_down", layer_idx=i,
+                in_dim=ff, out_dim=d, dep_group=f"L{i}.ff",
+                flops_per_token=2.0 * ff * d,
+                weight_elems=ff * d, act_elems_per_token=ff))
+    specs.append(LayerSpec(
+        name="head", kind="head", layer_idx=cfg.num_layers,
+        in_dim=d, out_dim=cfg.vocab_size, quantizable=True,
+        mix_supported=False,
+        flops_per_token=2.0 * d * cfg.vocab_size,
+        weight_elems=d * cfg.vocab_size, act_elems_per_token=d))
+    return specs
+
+
+# ===========================================================================
+# cspec building (quant bits arrays + ℓ1 masks) for LM models
+# ===========================================================================
+
+def _qs(cmp: Optional[LayerCMP]):
+    """QS dict; missing CMP -> FP32 pass-through (keeps pytree structure
+    constant across policies)."""
+    w, a = effective_bits(cmp) if cmp is not None else (32, 32)
+    return {"w_bits": jnp.int32(w), "a_bits": jnp.int32(a)}
+
+
+def _layer_params(params, i: int, scanned: bool):
+    blocks = params["blocks"]
+    if scanned:
+        return jax.tree.map(lambda x: x[i], blocks)
+    return blocks[i]
+
+
+def build_lm_cspec(cfg: ArchConfig, params, policy: Policy,
+                   specs: Sequence[LayerSpec]) -> dict:
+    scanned = cfg.scan_layers and cfg.homogeneous
+    by_layer: dict[int, dict[str, LayerCMP]] = {}
+    embed_bits = head_bits = None
+    for s, c in zip(specs, policy.cmps):
+        if s.kind == "embed":
+            embed_bits = jnp.int32(effective_bits(c)[0])
+        elif s.kind == "head":
+            head_bits = jnp.int32(effective_bits(c)[0])
+        else:
+            by_layer.setdefault(s.layer_idx, {})[s.kind] = c
+
+    layer_cspecs = []
+    for i, kind in enumerate(cfg.layer_kinds):
+        p_l = _layer_params(params, i, scanned)
+        cm = by_layer.get(i, {})
+        cs: dict[str, Any] = {}
+        if kind == "attn":
+            cq, co = cm.get("attn_qkv"), cm.get("attn_out")
+            head_mask = None
+            if cq is not None and cq.keep < cfg.num_heads:
+                scores = pruning.head_scores(p_l["attn"]["wq"]["w"],
+                                             cfg.num_heads)
+                head_mask = pruning.keep_mask(scores, cq.keep)
+            cs["attn"] = {"qkv": _qs(cq),
+                          "o": _qs(co),
+                          "head_mask": head_mask}
+            if cfg.moe is not None:
+                cu, cd = cm.get("moe_up"), cm.get("moe_down")
+                ff_mask = None
+                if cu is not None and cu.keep < cfg.d_ff:
+                    scores = pruning.l1_scores(
+                        [p_l["moe"]["w_up"], p_l["moe"]["w_gate"]], axis=-1)
+                    ff_mask = pruning.keep_mask(scores, cu.keep)
+                moe_cs = {"up": _qs(cu),
+                          "down": _qs(cd),
+                          "ff_mask": ff_mask,
+                          "dense_up": None, "dense_down": None,
+                          "dense_ff_mask": None}
+                du, dd = cm.get("mlp_up"), cm.get("mlp_down")
+                if cfg.moe.dense_residual:
+                    dmask = None
+                    if du is not None and du.keep < cfg.d_ff:
+                        scores = pruning.l1_scores(
+                            [p_l["moe"]["dense_w_up"],
+                             p_l["moe"]["dense_w_gate"]], axis=-1)
+                        dmask = pruning.keep_mask(scores, du.keep)
+                    moe_cs["dense_up"] = _qs(du)
+                    moe_cs["dense_down"] = _qs(dd)
+                    moe_cs["dense_ff_mask"] = dmask
+                cs["moe"] = moe_cs
+            else:
+                cu, cd = cm.get("mlp_up"), cm.get("mlp_down")
+                ff_mask = None
+                if cu is not None and cu.keep < cfg.d_ff:
+                    ws = [p_l["mlp"]["w_up"]["w"]]
+                    if "w_gate" in p_l["mlp"]:
+                        ws.append(p_l["mlp"]["w_gate"]["w"])
+                    ff_mask = pruning.keep_mask(pruning.l1_scores(ws),
+                                                cu.keep)
+                cs["mlp"] = {"up": _qs(cu),
+                             "down": _qs(cd),
+                             "ff_mask": ff_mask}
+        elif kind == "ssm":
+            ci, co = cm.get("ssm_in"), cm.get("ssm_out")
+            d_inner, nheads, _ = B.ssm_dims(cfg)
+            head_mask = None
+            if ci is not None and ci.keep < nheads:
+                wx = p_l["ssm"]["in_proj"][:, d_inner:2 * d_inner]
+                scores = pruning.head_scores(wx, nheads)
+                head_mask = pruning.keep_mask(scores, ci.keep)
+            cs["ssm"] = {"in": _qs(ci),
+                         "out": _qs(co),
+                         "head_mask": head_mask}
+        elif kind == "rglru":
+            ci, co = cm.get("rglru_in"), cm.get("rglru_out")
+            wmask = None
+            if ci is not None and ci.keep < cfg.lru_width:
+                scores = pruning.l1_scores([p_l["rglru"]["w_x"],
+                                            p_l["rglru"]["w_y"]])
+                wmask = pruning.keep_mask(scores, ci.keep)
+            cs["rglru"] = {"in": _qs(ci),
+                           "out": _qs(co),
+                           "width_mask": wmask}
+            cu, cd = cm.get("mlp_up"), cm.get("mlp_down")
+            ff_mask = None
+            if cu is not None and cu.keep < cfg.d_ff:
+                ws = [p_l["mlp"]["w_up"]["w"]]
+                if "w_gate" in p_l["mlp"]:
+                    ws.append(p_l["mlp"]["w_gate"]["w"])
+                ff_mask = pruning.keep_mask(pruning.l1_scores(ws), cu.keep)
+            cs["mlp"] = {"up": _qs(cu),
+                         "down": _qs(cd),
+                         "ff_mask": ff_mask}
+        layer_cspecs.append(cs)
+
+    if True:  # fill masks for BOTH paths: keeps the cspec pytree structure
+        # identical across policies, so one jit compilation serves the
+        # whole search (bits/masks are traced values, never shapes).
+        def fill_masks(cs_list):
+            keys_with_masks = {"attn": ("head_mask", cfg.num_heads),
+                               "mlp": ("ff_mask", cfg.d_ff),
+                               "moe": ("ff_mask", cfg.d_ff),
+                               "ssm": ("head_mask",
+                                       B.ssm_dims(cfg)[1] if cfg.ssm else 0),
+                               "rglru": ("width_mask", cfg.lru_width)}
+            for cs in cs_list:
+                for part, (mk, dim) in keys_with_masks.items():
+                    if part in cs and cs[part].get(mk) is None and dim:
+                        cs[part][mk] = jnp.ones((dim,), jnp.float32)
+                if "moe" in cs and cfg.moe and cfg.moe.dense_residual:
+                    if cs["moe"].get("dense_ff_mask") is None:
+                        cs["moe"]["dense_ff_mask"] = jnp.ones(
+                            (cfg.d_ff,), jnp.float32)
+            return cs_list
+
+        layer_cspecs = fill_masks(layer_cspecs)
+    if scanned:
+        blocks_cs = jax.tree.map(lambda *xs: jnp.stack(xs), *layer_cspecs)
+    else:
+        blocks_cs = layer_cspecs
+
+    out = {"blocks": blocks_cs}
+    if embed_bits is not None:
+        out["embed_bits"] = embed_bits
+    if head_bits is not None:
+        out["head_bits"] = head_bits
+    return out
+
+
+# ===========================================================================
+# Model adapters (protocol used by the search / sensitivity analysis)
+# ===========================================================================
+
+@dataclass
+class CompressibleLM:
+    """Adapter: ArchConfig LM + params + data -> the search interface."""
+    cfg: ArchConfig
+    params: Any
+
+    def __post_init__(self):
+        self.specs = lm_layer_specs(self.cfg)
+
+    def build_cspec(self, policy: Policy):
+        return build_lm_cspec(self.cfg, self.params, policy, self.specs)
+
+    def logits(self, batch: dict, cspec=None):
+        return M.forward(self.cfg, self.params, tokens=batch["tokens"],
+                         cspec=cspec)
+
+    def log_probs(self, batch: dict, cspec=None):
+        return jax.nn.log_softmax(self.logits(batch, cspec), -1)
+
+    def accuracy(self, batch: dict, cspec=None) -> jnp.ndarray:
+        """Next-token top-1 accuracy."""
+        lg = self.logits(batch, cspec)[:, :-1]
+        tgt = batch["tokens"][:, 1:]
+        return jnp.mean((jnp.argmax(lg, -1) == tgt).astype(jnp.float32))
+
+
+@dataclass
+class CompressibleResNet:
+    cfg: R.ResNetConfig
+    params: Any
+
+    def __post_init__(self):
+        self.specs = R.layer_specs(self.cfg)
+
+    def build_cspec(self, policy: Policy):
+        cspec = []
+        conv_i = 0
+        convs = list(R._iter_convs(self.cfg))
+        for s, c in zip(self.specs, policy.cmps):
+            entry: dict[str, Any] = {"qs": _qs(c) if s.quantizable else None,
+                                     "mask": None}
+            if s.kind == "conv":
+                if s.prunable:
+                    # always materialize a mask (ones when unpruned) so the
+                    # cspec structure is policy-independent -> one jit cache
+                    w = self._conv_weight(conv_i)
+                    scores = pruning.l1_scores([w])
+                    entry["mask"] = pruning.keep_mask(scores, c.keep)
+                conv_i += 1
+            cspec.append(entry)
+        return cspec
+
+    def _conv_weight(self, idx: int):
+        i = 0
+        if idx == 0:
+            return self.params["stem"]["w"]
+        i = 1
+        for blocks in self.params["stages"]:
+            for blk in blocks:
+                for key in ("conv1", "conv2", "skip"):
+                    if key in blk:
+                        if i == idx:
+                            return blk[key]["w"]
+                        i += 1
+        raise IndexError(idx)
+
+    def logits(self, batch: dict, cspec=None):
+        return R.forward(self.cfg, self.params, batch["images"], cspec)
+
+    def log_probs(self, batch: dict, cspec=None):
+        return jax.nn.log_softmax(self.logits(batch, cspec), -1)
+
+    def accuracy(self, batch: dict, cspec=None) -> jnp.ndarray:
+        lg = self.logits(batch, cspec)
+        return jnp.mean((jnp.argmax(lg, -1) == batch["labels"])
+                        .astype(jnp.float32))
+
+
+# ===========================================================================
+# Deployment: materialize truly sliced weights (unrolled LMs / ResNet)
+# ===========================================================================
+
+def slice_lm_params(cfg: ArchConfig, params, cspec) -> Any:
+    """Slice pruned channels out for deployment (unrolled models only).
+    Returns a new params pytree with reduced shapes."""
+    if cfg.scan_layers and cfg.homogeneous:
+        raise ValueError("slice requires an unrolled model; set "
+                         "scan_layers=False for deployment")
+    new = {k: v for k, v in params.items() if k != "blocks"}
+    new_blocks = []
+    for i, (p_l, cs) in enumerate(zip(params["blocks"], cspec["blocks"])):
+        p_l = jax.tree.map(lambda x: x, p_l)  # shallow copy
+        kind = cfg.layer_kinds[i]
+        if kind == "attn" and cs.get("attn", {}).get("head_mask") is not None:
+            hm = cs["attn"]["head_mask"]
+            idx = pruning.slice_indices(hm)
+            hd = cfg.head_dim
+            cols = np.concatenate([np.arange(h * hd, (h + 1) * hd)
+                                   for h in idx])
+            a = p_l["attn"]
+            a["wq"]["w"] = a["wq"]["w"][:, cols]
+            if "b" in a["wq"]:
+                a["wq"]["b"] = a["wq"]["b"][cols]
+            a["wo"]["w"] = a["wo"]["w"][cols, :]
+        mlp_cs = cs.get("mlp")
+        if mlp_cs is not None and mlp_cs.get("ff_mask") is not None:
+            idx = pruning.slice_indices(mlp_cs["ff_mask"])
+            m = p_l["mlp"]
+            m["w_up"]["w"] = m["w_up"]["w"][:, idx]
+            if "w_gate" in m:
+                m["w_gate"]["w"] = m["w_gate"]["w"][:, idx]
+            m["w_down"]["w"] = m["w_down"]["w"][idx, :]
+        new_blocks.append(p_l)
+    new["blocks"] = new_blocks
+    return new

@@ -1,0 +1,52 @@
+"""Hardware legality checks for compression-method parameters (CMPs).
+
+The paper's TVM/ARM analogue: bit-serial operators require input channels
+% 32, output channels % 8, no depthwise, spatial >= 2 — and layers failing
+the check fall back to INT8. Our TPU v5e analogue:
+
+  * MXU lane width is 128 — pruned dims are rounded so the *kept* count is a
+    multiple of the unit's ``prune_granularity`` (picked per layer so that
+    kept*head_dim etc. stays 128-aligned); otherwise the MXU pads and the
+    pruning buys nothing (the latency oracle models that padding).
+  * MIX (sub-8-bit) weights only pay off via int4 packing, which needs the
+    contracted dim 256-aligned; layers that cannot satisfy it get INT8.
+  * Embedding/unembedding (first/last layers): INT8-or-FP32 only — same
+    restriction the paper hits on ARM for first/last conv.
+  * Sub-8-bit *activations* are emulated (fake-quant) on TPU: allowed for
+    accuracy but the oracle grants them no compute speedup beyond int8.
+"""
+from __future__ import annotations
+
+from repro.core.spec import LayerCMP, LayerSpec
+
+MXU_LANE = 128
+INT4_ALIGN = 256
+
+
+def round_keep(spec: LayerSpec, keep: int) -> int:
+    """Round a kept-channel count down to the hardware granularity
+    (>= one granule)."""
+    g = max(1, spec.prune_granularity)
+    keep = max(g, (keep // g) * g)
+    return min(keep, spec.prune_dim)
+
+
+def mix_allowed(spec: LayerSpec) -> bool:
+    if not spec.mix_supported or not spec.quantizable:
+        return False
+    # int4 weight packing wants the contraction dim 256-aligned
+    return spec.in_dim % INT4_ALIGN == 0 or spec.kind == "conv"
+
+
+def legalize(spec: LayerSpec, cmp: LayerCMP) -> LayerCMP:
+    """Clamp a proposed CMP to what the hardware target supports."""
+    if spec.prunable and spec.prune_dim:
+        cmp.keep = round_keep(spec, cmp.keep)
+    else:
+        cmp.keep = spec.prune_dim
+    if not spec.quantizable:
+        cmp.mode, cmp.w_bits, cmp.a_bits = "FP32", 32, 32
+    elif cmp.mode == "MIX" and not mix_allowed(spec):
+        # paper: unsupported layers take the INT8 option instead
+        cmp.mode, cmp.w_bits, cmp.a_bits = "INT8", 8, 8
+    return cmp

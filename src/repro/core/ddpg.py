@@ -1,0 +1,208 @@
+"""DDPG (Lillicrap et al. 2015) in pure JAX — the paper's agent core.
+
+Paper hyperparameters: actor/critic MLPs with hidden (400, 300); sigmoid-
+bounded actions in [0,1]; Adam lr 1e-4 (actor) / 1e-3 (critic),
+β1=0.9 β2=0.999; γ=0.99; batch 128; replay 2000; exploration via truncated
+normal σ0=0.5, decay 0.95/episode; rewards in each sampled batch normalized
+with a moving average; states standardized with running mean/var estimates.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DDPGConfig:
+    state_dim: int = 16
+    action_dim: int = 1
+    hidden: Tuple[int, int] = (400, 300)
+    actor_lr: float = 1e-4
+    critic_lr: float = 1e-3
+    gamma: float = 0.99
+    tau: float = 0.01                  # soft target update
+    batch_size: int = 128
+    buffer_size: int = 2000
+    sigma0: float = 0.5
+    sigma_decay: float = 0.95
+    warmup_episodes: int = 10
+    updates_per_episode: int = 32
+    reward_ma_decay: float = 0.95      # moving-average reward normalizer
+
+
+def _mlp_init(key, dims, final_scale=3e-3):
+    params = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, k = jax.random.split(key)
+        lim = final_scale if i == len(dims) - 2 else 1.0 / math.sqrt(a)
+        params.append({
+            "w": jax.random.uniform(k, (a, b), jnp.float32, -lim, lim),
+            "b": jnp.zeros((b,), jnp.float32)})
+    return params
+
+
+def _mlp(params, x, final_act=None):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return final_act(x) if final_act else x
+
+
+def actor_forward(params, state):
+    return _mlp(params, state, jax.nn.sigmoid)   # actions in [0, 1]
+
+
+def critic_forward(params, state, action):
+    x = jnp.concatenate([state, action], axis=-1)
+    return _mlp(params, x)[..., 0]
+
+
+# --- minimal Adam (self-contained; the training stack has its own) ---
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, st, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = st["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, st["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, st["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2 ** t), v)
+    params = jax.tree.map(lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps),
+                          params, mh, vh)
+    return params, {"m": m, "v": v, "t": t}
+
+
+@dataclass
+class RunningNorm:
+    """Standardize states with running mean/var (paper §Proposed Agents)."""
+    dim: int
+    count: float = 1e-4
+    mean: np.ndarray = None
+    var: np.ndarray = None
+
+    def __post_init__(self):
+        if self.mean is None:
+            self.mean = np.zeros(self.dim, np.float32)
+        if self.var is None:
+            self.var = np.ones(self.dim, np.float32)
+
+    def update(self, x: np.ndarray):
+        x = np.atleast_2d(x)
+        bc, bm, bv = x.shape[0], x.mean(0), x.var(0)
+        delta = bm - self.mean
+        tot = self.count + bc
+        self.mean = self.mean + delta * bc / tot
+        m_a = self.var * self.count
+        m_b = bv * bc
+        self.var = (m_a + m_b + delta ** 2 * self.count * bc / tot) / tot
+        self.count = tot
+
+    def normalize(self, x: np.ndarray) -> np.ndarray:
+        return (x - self.mean) / np.sqrt(self.var + 1e-8)
+
+
+class DDPGAgent:
+    """One agent = actor + critic (+ targets) + optimizers + exploration."""
+
+    def __init__(self, cfg: DDPGConfig, seed: int = 0):
+        self.cfg = cfg
+        key = jax.random.PRNGKey(seed)
+        k1, k2, self.key = jax.random.split(key, 3)
+        dims_a = (cfg.state_dim,) + cfg.hidden + (cfg.action_dim,)
+        dims_c = (cfg.state_dim + cfg.action_dim,) + cfg.hidden + (1,)
+        self.actor = _mlp_init(k1, dims_a)
+        self.critic = _mlp_init(k2, dims_c)
+        self.target_actor = jax.tree.map(jnp.copy, self.actor)
+        self.target_critic = jax.tree.map(jnp.copy, self.critic)
+        self.opt_a = adam_init(self.actor)
+        self.opt_c = adam_init(self.critic)
+        self.norm = RunningNorm(cfg.state_dim)
+        self.reward_ma = 0.0
+        self.reward_ma_init = False
+        self.np_rng = np.random.default_rng(seed)
+        self._update = jax.jit(self._update_impl)
+
+    # ---------------- acting ----------------
+    def act(self, state: np.ndarray, sigma: float,
+            random: bool = False) -> np.ndarray:
+        if random:
+            return self.np_rng.uniform(0, 1, self.cfg.action_dim) \
+                .astype(np.float32)
+        s = self.norm.normalize(state.astype(np.float32))
+        mu = np.asarray(actor_forward(self.actor, jnp.asarray(s)))
+        if sigma > 0:
+            # truncated normal on [0, 1] around mu (paper Eq. 7)
+            for _ in range(16):
+                a = self.np_rng.normal(mu, sigma)
+                if np.all((a >= 0) & (a <= 1)):
+                    return a.astype(np.float32)
+            a = np.clip(self.np_rng.normal(mu, sigma), 0, 1)
+            return a.astype(np.float32)
+        return mu.astype(np.float32)
+
+    def sigma_at(self, episode: int) -> float:
+        e = max(0, episode - self.cfg.warmup_episodes)
+        return self.cfg.sigma0 * (self.cfg.sigma_decay ** e)
+
+    # ---------------- learning ----------------
+    def _update_impl(self, actor, critic, t_actor, t_critic, opt_a, opt_c,
+                     batch):
+        s, a, r, s2, done = batch
+        cfg = self.cfg
+
+        def critic_loss(cp):
+            a2 = actor_forward(t_actor, s2)
+            q_target = r + cfg.gamma * (1.0 - done) * critic_forward(
+                t_critic, s2, a2)
+            q = critic_forward(cp, s, a)
+            return jnp.mean((q - jax.lax.stop_gradient(q_target)) ** 2)
+
+        lc, gc = jax.value_and_grad(critic_loss)(critic)
+        critic, opt_c = adam_step(critic, gc, opt_c, cfg.critic_lr)
+
+        def actor_loss(ap):
+            return -jnp.mean(critic_forward(critic, s, actor_forward(ap, s)))
+
+        la, ga = jax.value_and_grad(actor_loss)(actor)
+        actor, opt_a = adam_step(actor, ga, opt_a, cfg.actor_lr)
+
+        t_actor = jax.tree.map(
+            lambda t, p: (1 - cfg.tau) * t + cfg.tau * p, t_actor, actor)
+        t_critic = jax.tree.map(
+            lambda t, p: (1 - cfg.tau) * t + cfg.tau * p, t_critic, critic)
+        return actor, critic, t_actor, t_critic, opt_a, opt_c, lc, la
+
+    def update(self, replay) -> Tuple[float, float]:
+        cfg = self.cfg
+        if len(replay) < cfg.batch_size:
+            return 0.0, 0.0
+        s, a, r, s2, done = replay.sample(cfg.batch_size)
+        # normalize rewards in the batch with a moving average (paper)
+        batch_mean = float(np.mean(r))
+        if not self.reward_ma_init:
+            self.reward_ma = batch_mean
+            self.reward_ma_init = True
+        else:
+            d = cfg.reward_ma_decay
+            self.reward_ma = d * self.reward_ma + (1 - d) * batch_mean
+        r = r - self.reward_ma
+        s = self.norm.normalize(s)
+        s2 = self.norm.normalize(s2)
+        batch = tuple(jnp.asarray(x) for x in (s, a, r, s2, done))
+        (self.actor, self.critic, self.target_actor, self.target_critic,
+         self.opt_a, self.opt_c, lc, la) = self._update(
+            self.actor, self.critic, self.target_actor, self.target_critic,
+            self.opt_a, self.opt_c, batch)
+        return float(lc), float(la)
+
+    def observe_states(self, states: np.ndarray):
+        self.norm.update(states)

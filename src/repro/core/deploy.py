@@ -1,0 +1,82 @@
+"""Deployment-mode quantization: store weights in integer containers.
+
+The search (core/search.py) evaluates ACCURACY with fake quant; deployment
+materializes the winning policy as real int8 / packed-int4 weights so the
+HBM/ICI traffic shrinks on the actual serving path (the quantity the
+latency oracle promised). Layer code (models/layers.py::materialize_weight)
+dequantizes on the fly — on TPU this fuses into the consuming matmul, and
+the full int8 MXU path is available through kernels/quant_matmul.py.
+
+Weight container formats (contraction axis = -2, always even here since
+every dim is a multiple of 128):
+    {"w":  bf16/f32 [..., in, out]}                       — uncompressed
+    {"w_q": int8 [..., in, out],   "w_scale": [..., 1, out]}  — int8
+    {"w_p": int8 [..., in//2, out],"w_scale": [..., 1, out]}  — int4 packed
+Scales are per-out-channel (and per-expert for stacked MoE weights).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_weight(w: jnp.ndarray, bits: int) -> dict:
+    """Symmetric integer quantization along the contraction axis (-2)."""
+    wf = w.astype(jnp.float32)
+    absmax = jnp.maximum(jnp.max(jnp.abs(wf), axis=-2, keepdims=True), 1e-8)
+    if bits <= 4:
+        scale = absmax / 7.0
+        q = jnp.clip(jnp.round(wf / scale), -8, 7).astype(jnp.int8)
+        lo = q[..., 0::2, :].astype(jnp.uint8) & 0xF
+        hi = (q[..., 1::2, :].astype(jnp.uint8) & 0xF) << 4
+        return {"w_p": (lo | hi).astype(jnp.int8),
+                "w_scale": scale.astype(jnp.float32)}
+    scale = absmax / 127.0
+    q = jnp.clip(jnp.round(wf / scale), -128, 127).astype(jnp.int8)
+    return {"w_q": q, "w_scale": scale.astype(jnp.float32)}
+
+
+def unpack_int4_weight(packed: jnp.ndarray) -> jnp.ndarray:
+    """[..., K//2, N] -> [..., K, N] int8 in [-8, 7] (row 2i = low nibble)."""
+    low = jnp.right_shift(jnp.left_shift(packed, 4), 4)
+    high = jnp.right_shift(packed, 4)
+    stacked = jnp.stack([low, high], axis=-2)          # [..., K//2, 2, N]
+    shp = packed.shape[:-2] + (2 * packed.shape[-2], packed.shape[-1])
+    return stacked.reshape(shp).astype(jnp.int8)
+
+
+RAW_WEIGHT_NAMES = ("w_up", "w_gate", "w_down", "dense_w_up",
+                    "dense_w_gate", "dense_w_down", "in_proj", "out_proj",
+                    "w_x", "w_y", "w_out", "embed", "unembed")
+
+
+def quantize_params_for_deploy(params, bits: int = 8,
+                               raw_names=RAW_WEIGHT_NAMES):
+    """Convert every matmul weight in a params pytree to integer storage.
+    Handles ``{"w": ...}`` linear dicts, raw named arrays (MoE weights,
+    embeddings), and scan-stacked leading layer axes."""
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "w" in node and getattr(node["w"], "ndim", 0) >= 2:
+                out = {k: v for k, v in node.items() if k != "w"}
+                out.update(quantize_weight(node["w"], bits))
+                return out
+            out = {}
+            for k, v in node.items():
+                if k in raw_names and getattr(v, "ndim", 0) >= 2 \
+                        and v.shape[-2] % 2 == 0:
+                    out[k] = quantize_weight(v, bits)
+                else:
+                    out[k] = walk(v)
+            return out
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+
+    return walk(params)
+
+
+def deployed_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params)
+               if hasattr(x, "dtype"))

@@ -1,0 +1,386 @@
+"""Hardware latency oracle — the TPU stand-in for the paper's
+compile-and-measure loop (TVM -> ARM wall clock).
+
+Two oracles, both producing roofline-term latencies for TPU v5e:
+
+* ``policy_latency`` — fast analytic per-unit model (closed-form roofline:
+  compute / memory / collective terms with MXU 128-padding, int8 = 2x MXU,
+  int4 weight packing, KV-cache traffic, MoE active-expert traffic). This is
+  what the RL reward probes every episode — the paper's "measure on device",
+  executable thousands of times without a compile.
+
+* ``roofline_from_compiled`` — derive the same three terms from an actual
+  ``jit(...).lower().compile()`` artifact: FLOPs/bytes from
+  ``cost_analysis()``, collective bytes parsed from the (GSPMD-partitioned)
+  HLO. Used by the dry-run, the §Roofline table, and to calibrate the
+  analytic oracle.
+
+TPU truth table encoded here (DESIGN.md §1): "FP32" policy mode runs as
+native bf16; INT8 doubles MXU throughput and halves weight/act traffic;
+MIX <= 4-bit weights halve traffic again (int4 packing) but do NOT add
+compute speed; MIX 5-6 bit weights ride in int8 containers (no memory win
+over INT8 — the oracle makes the agent discover this, like the paper's
+">6 bits is slower than INT8 on ARM" finding).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+from repro.core.policy import Policy
+from repro.core.spec import LayerCMP, LayerSpec, effective_bits
+
+
+@dataclass(frozen=True)
+class HardwareTarget:
+    name: str = "tpu-v5e"
+    peak_bf16: float = 197e12          # FLOP/s per chip
+    peak_int8: float = 394e12          # OP/s per chip
+    hbm_bw: float = 819e9              # B/s per chip
+    ici_bw: float = 50e9               # B/s per link
+    mxu_align: int = 128
+    op_overhead: float = 1e-7          # per fused-op dispatch (XLA fuses
+                                       # whole blocks; ~0.1us residual)
+
+
+V5E = HardwareTarget()
+
+
+@dataclass
+class LatencyContext:
+    tokens: int                        # tokens processed by one step
+    seq_ctx: int = 0                   # attention context length
+    mode: str = "prefill"              # train|prefill|decode
+    chips: int = 1
+    tp: int = 1                        # model-axis ways (activation collectives)
+    cache_bits: int = 16               # KV-cache storage precision
+    batch: int = 1
+
+
+def _weight_bytes_per_elem(w_bits: int) -> float:
+    if w_bits >= 9:
+        return 2.0                     # native bf16
+    if w_bits >= 5:
+        return 1.0                     # int8 container
+    return 0.5                         # int4 packing
+
+
+def _act_bytes_per_elem(a_bits: int) -> float:
+    return 1.0 if a_bits <= 8 else 2.0
+
+
+def _pad(x: float, align: int) -> float:
+    return math.ceil(max(x, 1) / align) * align
+
+
+def _peak(w_bits: int, a_bits: int, hw: HardwareTarget) -> float:
+    return hw.peak_int8 if (w_bits <= 8 and a_bits <= 8) else hw.peak_bf16
+
+
+@dataclass
+class UnitLatency:
+    name: str
+    compute_s: float
+    memory_s: float
+    collective_s: float = 0.0
+
+    @property
+    def time_s(self) -> float:
+        # compute/memory overlap within a fused op; collectives exposed
+        return max(self.compute_s, self.memory_s) + self.collective_s
+
+
+@dataclass
+class PolicyLatency:
+    units: list = field(default_factory=list)
+    overhead_s: float = 0.0
+
+    @property
+    def total_s(self) -> float:
+        return sum(u.time_s for u in self.units) + self.overhead_s
+
+    @property
+    def compute_s(self) -> float:
+        return sum(u.compute_s for u in self.units)
+
+    @property
+    def memory_s(self) -> float:
+        return sum(u.memory_s for u in self.units)
+
+    @property
+    def collective_s(self) -> float:
+        return sum(u.collective_s for u in self.units)
+
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+
+def _resolve_keep_fracs(specs: Sequence[LayerSpec], policy: Policy) -> dict:
+    """dep_group name -> keep fraction provided by the owning unit."""
+    fracs: dict[str, float] = {}
+    for s, c in zip(specs, policy.cmps):
+        if not s.prunable or not s.prune_dim:
+            continue
+        frac = c.keep / s.prune_dim
+        if s.kind == "attn_qkv":
+            fracs[f"L{s.layer_idx}.heads"] = frac
+        elif s.kind == "mlp_up":
+            grp = "dense_ff" if s.extra.get("dense_residual") else "ff"
+            fracs[f"L{s.layer_idx}.{grp}"] = frac
+        elif s.kind == "moe_up":
+            fracs[f"L{s.layer_idx}.moe_ff"] = frac
+        elif s.kind == "ssm_in":
+            fracs[f"L{s.layer_idx}.ssm_heads"] = frac
+        elif s.kind == "rglru_in":
+            fracs[f"L{s.layer_idx}.lru"] = frac
+    return fracs
+
+
+def unit_latency(spec: LayerSpec, cmp: LayerCMP, in_frac: float,
+                 hw: HardwareTarget, ctx: LatencyContext) -> UnitLatency:
+    w_bits, a_bits = effective_bits(cmp)
+    keep_frac = (cmp.keep / spec.prune_dim) if spec.prune_dim else 1.0
+    T = ctx.tokens
+    chips = max(1, ctx.chips)
+
+    # --- matmul dims after pruning + MXU padding ---
+    if spec.kind == "conv":
+        # im2col on the MXU: m = spatial positions, k = k²·cin, n = cout.
+        # Channels pad to the 128 lane width — pruning below a 128
+        # boundary buys no MXU time (TPU truth; ARM had no such floor).
+        px = spec.extra.get("px", 1)
+        m = T * px
+        k_dim = (spec.weight_elems / max(1, spec.out_dim)) * in_frac
+        n_dim = spec.out_dim * keep_frac
+        k_pad = _pad(k_dim, hw.mxu_align)
+        n_pad = _pad(n_dim, hw.mxu_align)
+        flops = 2.0 * m * k_pad * n_pad
+        w_bytes = (spec.weight_elems * in_frac * keep_frac
+                   * _weight_bytes_per_elem(w_bits))
+        a_bytes = m * k_dim * _act_bytes_per_elem(a_bits) + m * n_dim * 2.0
+        compute = flops / (_peak(w_bits, a_bits, hw) * chips)
+        memory = (w_bytes + a_bytes) / (hw.hbm_bw * chips)
+        return UnitLatency(spec.name, compute, memory)
+    k_dim = spec.in_dim * in_frac
+    if spec.kind == "attn_qkv":
+        hd = spec.extra.get("head_dim", 128)
+        kv = spec.extra.get("kv_heads", 0)
+        n_dim = keep_frac * (spec.out_dim - 2 * kv * hd) + 2 * kv * hd
+    elif spec.prunable and spec.prune_dim:
+        n_dim = spec.out_dim * keep_frac
+    else:
+        n_dim = spec.out_dim
+    k_pad = _pad(k_dim, hw.mxu_align)
+    n_pad = _pad(n_dim, hw.mxu_align)
+
+    if spec.kind == "embed":
+        # gather: one row per token
+        mem = T * spec.out_dim * _weight_bytes_per_elem(w_bits)
+        return UnitLatency(spec.name, 0.0, mem / (hw.hbm_bw * chips))
+
+    # number of matmuls fused in this unit (e.g. gated MLP up+gate = 2)
+    E_cnt = spec.extra.get("experts", 1) or 1
+    n_mats = max(1.0, spec.weight_elems /
+                 max(1, spec.in_dim * spec.out_dim * E_cnt))
+    flops = 2.0 * T * k_pad * n_pad * n_mats
+    expert_frac = 1.0
+    if spec.kind in ("moe_up", "moe_down"):
+        K = spec.extra["top_k"]
+        flops = 2.0 * T * K * k_pad * n_pad * n_mats
+        # weights touched: small batches only stream active experts' rows
+        expert_frac = min(1.0, (ctx.batch * K) / E_cnt) \
+            if ctx.mode == "decode" else 1.0
+
+    w_elems = spec.weight_elems * keep_frac * in_frac * expert_frac
+    w_bytes = w_elems * _weight_bytes_per_elem(w_bits)
+    a_bytes = T * k_dim * _act_bytes_per_elem(a_bits) + T * n_dim * 2.0
+
+    compute = flops / (_peak(w_bits, a_bits, hw) * chips)
+    memory = (w_bytes + a_bytes) / (hw.hbm_bw * chips)
+
+    # TP activation collective (all-reduce of the unit output) when sharded
+    coll = 0.0
+    if ctx.tp > 1 and spec.kind in ("attn_out", "mlp_down", "moe_down",
+                                    "ssm_out", "rglru_out", "head"):
+        coll = 2.0 * T * n_dim * 2.0 * (ctx.tp - 1) / ctx.tp / hw.ici_bw
+    return UnitLatency(spec.name, compute, memory, coll)
+
+
+def _attention_extra(spec: LayerSpec, cmp: LayerCMP, hw: HardwareTarget,
+                     ctx: LatencyContext, window: int) -> UnitLatency:
+    """Score+AV compute and KV-cache traffic for one attention layer."""
+    hd = spec.extra.get("head_dim", 128)
+    kv = spec.extra.get("kv_heads", 1)
+    keep_heads = cmp.keep if spec.prune_dim else 0
+    S = ctx.seq_ctx if window <= 0 else min(ctx.seq_ctx, window)
+    chips = max(1, ctx.chips)
+    flops = 4.0 * ctx.tokens * S * hd * keep_heads
+    if ctx.mode in ("train", "prefill"):
+        flops *= 0.5  # causal: half the positions on average
+    cache_bytes = ctx.tokens * S * 2 * kv * hd * (ctx.cache_bits / 8.0)
+    comp = flops / (hw.peak_bf16 * chips)
+    mem = cache_bytes / (hw.hbm_bw * chips)
+    return UnitLatency(spec.name + ".attn", comp, mem)
+
+
+def policy_latency(specs: Sequence[LayerSpec], policy: Policy,
+                   hw: HardwareTarget = V5E,
+                   ctx: Optional[LatencyContext] = None,
+                   window: int = 0) -> PolicyLatency:
+    ctx = ctx or LatencyContext(tokens=1, seq_ctx=1, mode="decode")
+    fracs = _resolve_keep_fracs(specs, policy)
+    out = PolicyLatency()
+    n_ops = 0
+    for s, c in zip(specs, policy.cmps):
+        in_frac = fracs.get(s.dep_group, 1.0) if s.dep_group else 1.0
+        out.units.append(unit_latency(s, c, in_frac, hw, ctx))
+        n_ops += 1
+        if s.kind == "attn_qkv" and ctx.seq_ctx > 0:
+            out.units.append(_attention_extra(s, c, hw, ctx, window))
+            n_ops += 1
+    out.overhead_s = n_ops * hw.op_overhead
+    return out
+
+
+# ===========================================================================
+# Compiled-HLO oracle (dry-run / §Roofline)
+# ===========================================================================
+
+_COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\b")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1,
+}
+
+
+def _first_shape_bytes(line: str) -> float:
+    """Bytes of the result shape(s) on an HLO instruction line (handles
+    tuple results, e.g. reduce-scatter -> (f32[32], f32[32]))."""
+    lhs = line.split(" = ", 1)
+    target = lhs[1] if len(lhs) == 2 else line
+    total = 0.0
+    m = _COLLECTIVE_RE.search(target)
+    head = target[:m.start()] if m else target.split("(", 1)[0]
+    for dt, dims in _SHAPE_RE.findall(head):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def hlo_collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind over an HLO module."""
+    out: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m or " = " not in line:
+            continue
+        if "-done" in line:  # avoid double counting async pairs
+            continue
+        kind = m.group(1)
+        b = _first_shape_bytes(line)
+        out[kind] = out.get(kind, 0.0) + b
+        count[kind] = count.get(kind, 0) + 1
+    out["_counts"] = count
+    return out
+
+
+@dataclass
+class RooflineReport:
+    """Roofline terms from a compiled SPMD artifact.
+
+    IMPORTANT semantics: ``cost_analysis()`` on a GSPMD-partitioned module
+    reports PER-DEVICE flops/bytes (each device executes the partitioned
+    program), and HLO shapes in the partitioned module are per-shard — so
+    ``flops``/``bytes_accessed``/``collective_bytes`` here are per-chip.
+    The spec formula  compute = HLO_FLOPs / (chips × peak)  is recovered
+    because global HLO_FLOPs = per-chip × chips.  ``model_flops`` is GLOBAL
+    (6·N·D over the full batch).
+    """
+    flops: float                       # per-chip
+    bytes_accessed: float              # per-chip
+    collective_bytes: float            # per-chip
+    per_collective: dict
+    chips: int
+    hw: HardwareTarget
+    model_flops: float = 0.0           # 6·N·D-style useful flops (global)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / self.hw.peak_bf16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / self.hw.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / self.hw.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        t = {"compute": self.compute_s, "memory": self.memory_s,
+             "collective": self.collective_s}
+        return max(t, key=t.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """GLOBAL useful flops / GLOBAL compiled flops (flops field is
+        per-chip)."""
+        tot = self.flops * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the modelled step
+        time (useful-FLOPs MFU bound)."""
+        if self.step_s <= 0:
+            return 0.0
+        return (self.model_flops / self.step_s) / (self.hw.peak_bf16 *
+                                                   self.chips)
+
+    def summary(self) -> dict:
+        return {
+            "flops": self.flops, "bytes": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "step_s": self.step_s, "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline_from_compiled(compiled, hlo_text: Optional[str] = None,
+                           chips: int = 1, hw: HardwareTarget = V5E,
+                           model_flops: float = 0.0) -> RooflineReport:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    colls = hlo_collective_bytes(text)
+    cbytes = sum(v for k, v in colls.items() if not k.startswith("_"))
+    return RooflineReport(flops=flops, bytes_accessed=byts,
+                          collective_bytes=cbytes, per_collective=colls,
+                          chips=chips, hw=hw, model_flops=model_flops)

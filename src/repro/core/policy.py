@@ -1,0 +1,100 @@
+"""Continuous policy -> discrete CMP mapping (paper Eq. 1, 4, 8).
+
+A *policy* is the per-layer list of continuous compression parameters in
+[0,1] (Eq. 1). Actions from the agents are mapped:
+
+  * pruning: Eq. 4 inverse mapping  d_v(r) = floor((1-r) * v) + 1
+  * quantization: threshold selection (Eq. 8) with t_mix=0.5, t_int8=0.2,
+    then Eq. 4 against the max mix bit width (6 — see quantization.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import constraints
+from repro.core.quantization import MAX_MIX_BITS
+from repro.core.spec import LayerCMP, LayerSpec
+
+T_MIX = 0.5
+T_INT8 = 0.2
+
+
+def d_inverse(r: float, v: int) -> int:
+    """Paper Eq. 4: continuous ratio r in [0,1] -> discrete value in [1, v]."""
+    return int(np.floor((1.0 - r) * v)) + 1 if v > 0 else 0
+
+
+def scale_mix_action(a: float) -> float:
+    """Paper Eq. 8 (with the min/max order fixed — the printed equation's
+    clip bounds are transposed): r = clip((a - t_mix)/(1 - t_mix), 0, 1)."""
+    return float(np.clip((a - T_MIX) / (1.0 - T_MIX), 0.0, 1.0))
+
+
+def quant_cmp_from_actions(a_w: float, a_a: float,
+                           max_bits: int = MAX_MIX_BITS) -> LayerCMP:
+    """Threshold-based quant-mode selection (paper §Quantization details)."""
+    if max(a_w, a_a) > T_MIX:
+        # r is a *compression ratio*: r=0 -> max_bits, r=1 -> 1 bit (Eq. 4)
+        r_w, r_a = scale_mix_action(a_w), scale_mix_action(a_a)
+        return LayerCMP(keep=0, mode="MIX",
+                        w_bits=min(d_inverse(r_w, max_bits), max_bits),
+                        a_bits=min(d_inverse(r_a, max_bits), max_bits))
+    if max(a_w, a_a) > T_INT8:
+        return LayerCMP(keep=0, mode="INT8", w_bits=8, a_bits=8)
+    return LayerCMP(keep=0, mode="FP32", w_bits=32, a_bits=32)
+
+
+def prune_keep_from_action(spec: LayerSpec, a_p: float) -> int:
+    """Action -> kept channel count (Eq. 4 with v = original count)."""
+    if not spec.prunable or spec.prune_dim == 0:
+        return spec.prune_dim
+    return min(d_inverse(float(a_p), spec.prune_dim), spec.prune_dim)
+
+
+def map_actions(spec: LayerSpec, actions: Sequence[float],
+                methods: str) -> LayerCMP:
+    """methods: "p" (prune), "q" (quant) or "pq" (joint)."""
+    if methods == "p":
+        cmp = LayerCMP(keep=prune_keep_from_action(spec, actions[0]))
+    elif methods == "q":
+        cmp = quant_cmp_from_actions(actions[0], actions[1])
+        cmp.keep = spec.prune_dim
+    elif methods == "pq":
+        cmp = quant_cmp_from_actions(actions[1], actions[2])
+        cmp.keep = prune_keep_from_action(spec, actions[0])
+    else:
+        raise ValueError(methods)
+    return constraints.legalize(spec, cmp)
+
+
+@dataclass
+class Policy:
+    """A complete compression policy for a model (one CMP per LayerSpec)."""
+    cmps: List[LayerCMP] = field(default_factory=list)
+
+    @staticmethod
+    def reference(specs: Sequence[LayerSpec]) -> "Policy":
+        """P_r — the initial no-compression policy."""
+        return Policy([LayerCMP(keep=s.prune_dim) for s in specs])
+
+    def macs_fraction(self, specs: Sequence[LayerSpec]) -> float:
+        tot = sum(s.flops_per_token for s in specs) or 1.0
+        acc = 0.0
+        for s, c in zip(specs, self.cmps):
+            f_out = (c.keep / s.prune_dim) if s.prune_dim else 1.0
+            acc += s.flops_per_token * f_out
+        return acc / tot
+
+    def bops(self, specs: Sequence[LayerSpec]) -> float:
+        """Bit operations: MACs * w_bits * a_bits (Baskin et al. 2021)."""
+        acc = 0.0
+        for s, c in zip(specs, self.cmps):
+            f_out = (c.keep / s.prune_dim) if s.prune_dim else 1.0
+            acc += s.flops_per_token / 2.0 * f_out * c.w_bits * c.a_bits
+        return acc
+
+    def n_actions(self, methods: str) -> int:
+        return {"p": 1, "q": 2, "pq": 3}[methods]

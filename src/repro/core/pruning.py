@@ -1,0 +1,53 @@
+"""Structured pruning — ℓ1 channel selection (Li et al. 2017, paper §Pruning).
+
+Given a weight (or a group of weights sharing an output dim) and a kept
+count, produce a float 0/1 mask keeping the channels with the largest ℓ1
+norms. During search the mask multiplies activations (identical accuracy
+effect to removal, static shapes — see DESIGN.md §3); deployment slices.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def l1_scores(ws: Sequence[jnp.ndarray], axis: int = -1) -> jnp.ndarray:
+    """Sum of ℓ1 norms over every weight in the group, reduced to the
+    channel axis (default: last = output channels)."""
+    total = None
+    for w in ws:
+        red = tuple(i for i in range(w.ndim) if i != (axis % w.ndim))
+        s = jnp.sum(jnp.abs(w.astype(jnp.float32)), axis=red)
+        total = s if total is None else total + s
+    return total
+
+
+def keep_mask(scores: jnp.ndarray, keep: int) -> jnp.ndarray:
+    """Float mask keeping the ``keep`` highest-scoring channels."""
+    n = scores.shape[0]
+    keep = int(np.clip(keep, 0, n))
+    if keep >= n:
+        return jnp.ones((n,), jnp.float32)
+    if keep == 0:
+        return jnp.zeros((n,), jnp.float32)
+    thresh = jnp.sort(scores)[n - keep]
+    mask = (scores >= thresh).astype(jnp.float32)
+    # Ties could keep too many — break deterministically by index order.
+    excess = jnp.cumsum(mask) > keep
+    return jnp.where(excess, 0.0, mask)
+
+
+def head_scores(wq: jnp.ndarray, num_heads: int) -> jnp.ndarray:
+    """ℓ1 score per attention head from wq [d, H*hd]."""
+    d, hhd = wq.shape
+    hd = hhd // num_heads
+    w = jnp.abs(wq.astype(jnp.float32)).reshape(d, num_heads, hd)
+    return jnp.sum(w, axis=(0, 2))
+
+
+def slice_indices(mask: jnp.ndarray) -> np.ndarray:
+    """Indices of kept channels (host-side; used when materializing the
+    deployed, truly-sliced model)."""
+    return np.nonzero(np.asarray(mask) > 0)[0]

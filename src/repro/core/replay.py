@@ -1,0 +1,36 @@
+"""Replay buffer for the DDPG agents (paper: size 2000 transitions)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ReplayBuffer:
+    def __init__(self, capacity: int, state_dim: int, action_dim: int,
+                 seed: int = 0):
+        self.capacity = capacity
+        self.states = np.zeros((capacity, state_dim), np.float32)
+        self.actions = np.zeros((capacity, action_dim), np.float32)
+        self.rewards = np.zeros((capacity,), np.float32)
+        self.next_states = np.zeros((capacity, state_dim), np.float32)
+        self.dones = np.zeros((capacity,), np.float32)
+        self.size = 0
+        self.ptr = 0
+        self.rng = np.random.default_rng(seed)
+
+    def push(self, s, a, r, s_next, done):
+        i = self.ptr
+        self.states[i] = s
+        self.actions[i] = a
+        self.rewards[i] = r
+        self.next_states[i] = s_next
+        self.dones[i] = float(done)
+        self.ptr = (self.ptr + 1) % self.capacity
+        self.size = min(self.size + 1, self.capacity)
+
+    def sample(self, batch: int):
+        idx = self.rng.integers(0, self.size, size=batch)
+        return (self.states[idx], self.actions[idx], self.rewards[idx],
+                self.next_states[idx], self.dones[idx])
+
+    def __len__(self):
+        return self.size

@@ -1,0 +1,131 @@
+"""Sensitivity analysis (paper Eq. 5, generalized ZeroQ).
+
+For each layer and each probe CMP, compress ONLY that layer (reference
+policy elsewhere) and measure the KL divergence between the compressed and
+the original model's output distributions over N calibration samples:
+
+    Ω(P) = 1/N Σ_j D_KL( M_P(θ;x_j) || M(θ;x_j) )
+
+The full analysis runs once, up-front, for all layers (paper §Sensitivity);
+results feed the agent state. One jitted evaluation serves every probe —
+cspec bits/masks are traced values, so there is exactly one compile.
+"""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import Policy
+from repro.core.spec import LayerCMP, LayerSpec
+
+
+def kl_divergence(logp_c: jnp.ndarray, logp_o: jnp.ndarray) -> jnp.ndarray:
+    """D_KL(compressed || original) averaged over batch (and positions)."""
+    p_c = jnp.exp(logp_c)
+    kl = jnp.sum(p_c * (logp_c - logp_o), axis=-1)
+    return jnp.mean(kl)
+
+
+# probe CMPs per method (paper: a predefined number of sample policies)
+QUANT_W_PROBES = (8, 6, 4, 3, 2)
+QUANT_A_PROBES = (8, 6, 4, 3, 2)
+N_PRUNE_PROBES = 10
+
+
+@dataclass
+class SensitivityResult:
+    """per layer-spec name -> {probe_name: KL}"""
+    table: Dict[str, Dict[str, float]]
+
+    def feature(self, name: str, probe: str, default: float = 0.0) -> float:
+        return self.table.get(name, {}).get(probe, default)
+
+    def features_for(self, name: str) -> List[float]:
+        """Fixed-length probe feature vector for the agent state
+        (log1p-squashed KLs)."""
+        row = self.table.get(name, {})
+        keys = (["w4", "w2", "a4", "a2"] +
+                ["p50", "p25"])
+        return [float(np.log1p(row.get(k, 0.0))) for k in keys]
+
+
+def run_sensitivity(cmodel, batch, jit_logprobs=None) -> SensitivityResult:
+    """cmodel: CompressibleLM/CompressibleResNet; batch: calibration data."""
+    specs: Sequence[LayerSpec] = cmodel.specs
+    ref = Policy.reference(specs)
+
+    if jit_logprobs is None:
+        jit_logprobs = jax.jit(
+            lambda cs: cmodel.log_probs(batch, cs))
+    base_cspec = cmodel.build_cspec(ref)
+    logp_o = jit_logprobs(base_cspec)
+
+    def probe_kl(policy: Policy) -> float:
+        cs = cmodel.build_cspec(policy)
+        logp_c = jit_logprobs(cs)
+        return float(kl_divergence(logp_c, logp_o))
+
+    table: Dict[str, Dict[str, float]] = {}
+    for i, s in enumerate(specs):
+        row: Dict[str, float] = {}
+        if s.quantizable:
+            for b in (4, 2):
+                pol = copy.deepcopy(ref)
+                pol.cmps[i] = LayerCMP(keep=s.prune_dim, mode="MIX",
+                                       w_bits=b, a_bits=32)
+                row[f"w{b}"] = probe_kl(pol)
+                pol = copy.deepcopy(ref)
+                pol.cmps[i] = LayerCMP(keep=s.prune_dim, mode="MIX",
+                                       w_bits=32, a_bits=b)
+                row[f"a{b}"] = probe_kl(pol)
+        if s.prunable and s.prune_dim:
+            for frac, tag in ((0.5, "p50"), (0.25, "p25")):
+                pol = copy.deepcopy(ref)
+                keep = max(1, int(s.prune_dim * frac))
+                pol.cmps[i] = LayerCMP(keep=keep)
+                row[tag] = probe_kl(pol)
+        table[s.name] = row
+    return SensitivityResult(table)
+
+
+def full_sweep(cmodel, batch, w_bits=QUANT_W_PROBES, a_bits=QUANT_A_PROBES,
+               n_prune: int = N_PRUNE_PROBES):
+    """Dense sweep used for the paper's Fig. 6 plots (slower)."""
+    specs = cmodel.specs
+    ref = Policy.reference(specs)
+    jit_logprobs = jax.jit(lambda cs: cmodel.log_probs(batch, cs))
+    logp_o = jit_logprobs(cmodel.build_cspec(ref))
+
+    rows = []
+    for i, s in enumerate(specs):
+        if s.quantizable:
+            for b in w_bits:
+                pol = copy.deepcopy(ref)
+                pol.cmps[i] = LayerCMP(keep=s.prune_dim, mode="MIX",
+                                       w_bits=b, a_bits=32)
+                kl = float(kl_divergence(
+                    jit_logprobs(cmodel.build_cspec(pol)), logp_o))
+                rows.append({"layer": s.name, "method": "quant_w",
+                             "param": b, "kl": kl})
+            for b in a_bits:
+                pol = copy.deepcopy(ref)
+                pol.cmps[i] = LayerCMP(keep=s.prune_dim, mode="MIX",
+                                       w_bits=32, a_bits=b)
+                kl = float(kl_divergence(
+                    jit_logprobs(cmodel.build_cspec(pol)), logp_o))
+                rows.append({"layer": s.name, "method": "quant_a",
+                             "param": b, "kl": kl})
+        if s.prunable and s.prune_dim:
+            for frac in np.linspace(0.1, 1.0, n_prune):
+                pol = copy.deepcopy(ref)
+                pol.cmps[i] = LayerCMP(keep=max(1, int(s.prune_dim * frac)))
+                kl = float(kl_divergence(
+                    jit_logprobs(cmodel.build_cspec(pol)), logp_o))
+                rows.append({"layer": s.name, "method": "prune",
+                             "param": float(frac), "kl": kl})
+    return rows

@@ -1,0 +1,75 @@
+"""Agent state construction (paper Fig. 2: model features X_t -> s_t).
+
+Features per time step (one compressible unit): position, unit kind,
+dimensions, FLOPs/weight shares, sensitivity probes, previous action, and
+latency-budget bookkeeping under the partial policy (AMC's reduced/rest
+features, computed against the hardware latency oracle instead of FLOPs).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.latency import (HardwareTarget, LatencyContext,
+                                PolicyLatency, policy_latency)
+from repro.core.policy import Policy
+from repro.core.sensitivity import SensitivityResult
+from repro.core.spec import LayerSpec
+
+KINDS = ("conv", "attn_qkv", "attn_out", "mlp_up", "mlp_down", "moe_up",
+         "moe_down", "ssm_in", "ssm_out", "rglru_in", "rglru_out", "embed",
+         "head")
+
+
+def state_dim(action_dim: int) -> int:
+    return 1 + len(KINDS) + 3 + 2 + 2 + 6 + action_dim + 3
+
+
+def build_state(specs: Sequence[LayerSpec], t: int, partial: Policy,
+                sens: SensitivityResult, prev_action: np.ndarray,
+                hw: HardwareTarget, ctx: LatencyContext,
+                ref_lat: PolicyLatency, window: int = 0) -> np.ndarray:
+    s = specs[t]
+    total_flops = sum(x.flops_per_token for x in specs) or 1.0
+    total_weights = sum(x.weight_elems for x in specs) or 1.0
+
+    kind_onehot = [1.0 if s.kind == k else 0.0 for k in KINDS]
+
+    cur = policy_latency(specs, partial, hw, ctx, window)
+    ref_total = ref_lat.total_s or 1.0
+    # latency of units decided so far (indices < t) under partial policy
+    # vs what remains at reference cost
+    per_unit = [u.time_s for u in cur.units]
+    # policy_latency may interleave attention-extra entries; map by name
+    decided = sum(u.time_s for u in cur.units
+                  if _unit_index(u.name, specs) < t)
+    rest_ref = sum(u.time_s for u in ref_lat.units
+                   if _unit_index(u.name, specs) >= t)
+    this_share = sum(u.time_s for u in ref_lat.units
+                     if _unit_index(u.name, specs) == t) / ref_total
+
+    feats: List[float] = [t / max(1, len(specs))]
+    feats += kind_onehot
+    feats += [np.log1p(s.in_dim) / 12.0, np.log1p(s.out_dim) / 12.0,
+              np.log1p(s.prune_dim) / 12.0]
+    feats += [s.flops_per_token / total_flops,
+              s.weight_elems / total_weights]
+    feats += [1.0 if s.prunable else 0.0, 1.0 if s.mix_supported else 0.0]
+    feats += sens.features_for(s.name)
+    feats += list(np.asarray(prev_action, np.float32))
+    feats += [this_share, decided / ref_total, rest_ref / ref_total]
+    return np.asarray(feats, np.float32)
+
+
+_name_cache: dict = {}
+
+
+def _unit_index(unit_name: str, specs: Sequence[LayerSpec]) -> int:
+    key = id(specs)
+    table = _name_cache.get(key)
+    if table is None:
+        table = {s.name: i for i, s in enumerate(specs)}
+        _name_cache[key] = table
+    base = unit_name[:-5] if unit_name.endswith(".attn") else unit_name
+    return table.get(base, len(specs))

@@ -1,0 +1,295 @@
+"""Logical-axis sharding rules (MaxText-style) for all assigned archs.
+
+Two pieces:
+
+* ``axis_rules`` context — models annotate activations with logical axes via
+  ``shard(x, "batch", "seq", "embed")``; the active context maps logical axes
+  to mesh axes and inserts ``with_sharding_constraint``. Outside a context the
+  helper is a no-op, so single-device smoke tests never touch device state.
+
+* ``param_shardings(arch, params)`` — path-regex table mapping every weight
+  leaf to a PartitionSpec implementing DP/FSDP over ``data`` (+``pod``) and
+  TP/EP over ``model``, with a divisibility guard that drops a mesh axis
+  whenever a dim does not divide evenly (keeps one rule-set valid for full
+  and reduced smoke configs alike).
+"""
+from __future__ import annotations
+
+import re
+import threading
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+# Logical axis -> mesh axes. "pod" is prepended to batch when present.
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": (),                 # sequence kept unsharded (SP optional, see below)
+    "seq_sp": ("model",),      # sequence-parallel variant (norm/residual path)
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "fsdp": ("data",),         # weight-only axis
+    "state": (),
+    "layers": (),
+}
+
+
+class axis_rules:
+    """Context manager activating a mesh + logical-axis rules."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[dict] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES if rules is None else rules)
+        # Drop mesh axes that do not exist (e.g. "pod" on the single-pod mesh).
+        names = set(mesh.axis_names)
+        self.rules = {
+            k: tuple(a for a in v if a in names) for k, v in self.rules.items()
+        }
+
+    def __enter__(self):
+        stack = getattr(_ctx, "stack", [])
+        stack.append(self)
+        _ctx.stack = stack
+        return self
+
+    def __exit__(self, *exc):
+        _ctx.stack.pop()
+        return False
+
+
+def current_rules() -> Optional["axis_rules"]:
+    stack = getattr(_ctx, "stack", [])
+    return stack[-1] if stack else None
+
+
+def current_axis_size(logical: str) -> int:
+    """Product of mesh-axis sizes a logical axis maps to (1 w/o context).
+    Used e.g. by the MoE layer to pick its shard-local dispatch grouping."""
+    ctx = current_rules()
+    if ctx is None:
+        return 1
+    size = 1
+    for a in ctx.rules.get(logical, ()):
+        size *= ctx.mesh.shape[a]
+    return size
+
+
+def _spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+              ctx: "axis_rules") -> P:
+    mesh = ctx.mesh
+    parts, used = [], set()
+    for dim, name in zip(shape, logical):
+        axes = ctx.rules.get(name, ()) if name else ()
+        axes = tuple(a for a in axes if a not in used)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if axes and size > 1 and dim % size == 0:
+            parts.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def shard(x: jnp.ndarray, *logical: Optional[str]) -> jnp.ndarray:
+    """Annotate activation ``x`` with logical axes (no-op w/o active rules)."""
+    ctx = current_rules()
+    if ctx is None or x.ndim != len(logical):
+        return x
+    spec = _spec_for(x.shape, logical, ctx)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings: path-regex -> logical axes per dim.
+# Weight layout convention is [in, out]; stacked scan layers prepend "layers".
+# FSDP ("fsdp" -> data axis) shards the non-TP weight axis, ZeRO-3 style;
+# optimizer state inherits these specs (see repro/optim).
+# ---------------------------------------------------------------------------
+
+PARAM_RULES: list[tuple[str, tuple]] = [
+    # embeddings / unembedding: vocab-TP only. FSDP on d would make the
+    # logits matmul contract over the FSDP axis -> all-reduce of the FULL
+    # logits tensor (8.6 GB/dev for mixtral train) — §Perf iteration A1.
+    (r"(^|/)embed$",          ("vocab", None)),
+    (r"unembed$",             (None, "vocab")),
+    # attention (linear params nest as .../w and .../b)
+    (r"attn/w(q|k|v)/w$",     ("fsdp", "heads")),
+    (r"attn/w(q|k|v)/b$",     ("heads",)),
+    (r"attn/wo/w$",           ("heads", "fsdp")),
+    (r"attn/wo/b$",           (None,)),
+    # dense mlp
+    (r"mlp/w_(up|gate)/w$",   ("fsdp", "ff")),
+    (r"mlp/w_down/w$",        ("ff", "fsdp")),
+    # moe — "ep" archs shard experts over model, "tp" archs shard ff
+    (r"moe/router$",          ("fsdp", None)),
+    (r"moe/w_(up|gate)$",     ("experts", "fsdp", "ff")),
+    (r"moe/w_down$",          ("experts", "ff", "fsdp")),
+    (r"moe/dense_w_(up|gate)$", ("fsdp", "ff")),
+    (r"moe/dense_w_down$",    ("ff", "fsdp")),
+    # ssm
+    (r"ssm/in_proj$",         ("fsdp", "heads")),
+    (r"ssm/out_proj$",        ("heads", "fsdp")),
+    (r"ssm/conv_w$",          (None, "heads")),
+    (r"ssm/(A_log|D|dt_bias)$", ("heads",)),
+    # rg-lru
+    (r"rglru/w_(x|y)$",       ("fsdp", "ff")),
+    (r"rglru/w_out$",         ("ff", "fsdp")),
+    (r"rglru/(conv_w)$",      (None, "ff")),
+    (r"rglru/(a_param|w_a|b_a|w_i|b_i)$", ("ff",)),
+    # norms / scalars — replicated
+    (r".*",                   None),
+]
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def logical_axes_for_path(path: str, ndim: int, stacked: bool) -> tuple:
+    for pat, axes in PARAM_RULES:
+        if re.search(pat, path):
+            if axes is None:
+                return (None,) * ndim
+            axes = tuple(axes)
+            if stacked and ndim == len(axes) + 1:
+                axes = ("layers",) + axes
+            if len(axes) != ndim:  # bias under a matched matmul rule, etc.
+                return (None,) * ndim
+            return axes
+    return (None,) * ndim
+
+
+def _container_axes(p: str, ndim: int, stacked: bool) -> tuple:
+    """Logical axes for a leaf, understanding deploy-quantized containers
+    (core/deploy.py): ``.../w_q|w_p`` shard like the dense weight,
+    ``.../w_scale`` keeps only the out-channel axis."""
+    leafname = p.split("/")[-1]
+    if leafname in ("w_q", "w_p", "w_scale"):
+        parent = p.rsplit("/", 1)[0]
+        for cand in (parent + "/w", parent):
+            axes = logical_axes_for_path(cand, ndim, stacked)
+            if any(a is not None for a in axes):
+                break
+        if leafname == "w_scale":
+            axes = (None,) * (ndim - 1) + (axes[-1],)
+        return axes
+    return logical_axes_for_path(p, ndim, stacked)
+
+
+def param_shardings(params, mesh: Mesh, rules: Optional[dict] = None,
+                    scanned: bool = True):
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs)."""
+    ctx = axis_rules(mesh, rules)
+
+    def leaf(path, x):
+        p = _path_str(path)
+        stacked = scanned and p.startswith("blocks")
+        axes = _container_axes(p, x.ndim, stacked)
+        return NamedSharding(mesh, _spec_for(x.shape, axes, ctx))
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def cache_shardings(cache_shape, mesh: Mesh, rules: Optional[dict] = None):
+    """Decode-cache shardings: batch over (pod, data); the model-axis
+    placement is SIZE-DEPENDENT (§Perf C2):
+
+      1. head (TP) sharding when kv_heads divides the model axis;
+      2. else REPLICATE over model when the per-device copy is small
+         (< threshold) — dynamic-update-slice then stays fully local;
+      3. else context-parallel: shard the cache LENGTH dim (fits big
+         caches; costs per-step DUS/softmax-combine collectives).
+    """
+    ctx = axis_rules(mesh, rules)
+
+    model_size = 1
+    for a in ctx.rules.get("kv_heads", ()):
+        model_size *= mesh.shape[a]
+    batch_size = 1
+    for a in ctx.rules.get("batch", ()):
+        batch_size *= mesh.shape[a]
+
+    def _kv_policy(x, kv, tail_dims):
+        if model_size > 1 and kv % model_size == 0:
+            return "heads"
+        elems = 1
+        for d in x.shape[-tail_dims:]:   # per-LAYER size (drop scan stack)
+            elems *= d
+        per_dev = elems * x.dtype.itemsize / max(1, batch_size)
+        return "replicate" if per_dev <= CACHE_REPLICATE_THRESHOLD \
+            else "length"
+
+    def leaf(path, x):
+        name = _path_str(path).split("/")[-1]
+        nd = x.ndim
+        if name in ("k_s", "v_s"):
+            policy = _kv_policy(x, x.shape[-1], 3)
+            axes = {"heads": ("batch", None, "kv_heads"),
+                    "replicate": ("batch", None, None),
+                    "length": ("batch", "seq_sp", None)}[policy]
+        elif name in ("k", "v"):
+            policy = _kv_policy(x, x.shape[-2], 4)
+            axes = {"heads": ("batch", None, "kv_heads", None),
+                    "replicate": ("batch", None, None, None),
+                    "length": ("batch", "seq_sp", None, None)}[policy]
+        elif name == "state":
+            axes = ("batch", "heads", None, None) if nd >= 4 \
+                else ("batch", "ff")
+        elif name == "conv":
+            axes = ("batch", None, "ff")
+        else:
+            axes = (None,) * nd
+        if nd == len(axes) + 1:          # scan-stacked leading layer dim
+            axes = ("layers",) + axes
+        if len(axes) < nd:
+            axes = axes + (None,) * (nd - len(axes))
+        return NamedSharding(mesh, _spec_for(x.shape, axes[:nd], ctx))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shape)
+
+
+# §Perf C2 (REFUTED): replicating small caches over the model axis was
+# hypothesized to eliminate DUS collectives; measured 26x WORSE (XLA moves
+# the full per-device cache through collectives each step when the written
+# k/v slice arrives model-sharded). Length-sharding stays the fallback.
+CACHE_REPLICATE_THRESHOLD = 0   # bytes; 0 = never replicate
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh: Mesh, ndim: int = 2, batch_size: int = 0):
+    """Inputs: batch over (pod, data); rest unsharded. If ``batch_size`` is
+    given, mesh axes that do not divide it are dropped (e.g. batch=1
+    long-context decode runs batch-replicated, sharded over model only)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if batch_size:
+        kept, size = [], 1
+        for a in axes:
+            if batch_size % (size * mesh.shape[a]) == 0:
+                kept.append(a)
+                size *= mesh.shape[a]
+        axes = tuple(kept)
+    if not axes:
+        return NamedSharding(mesh, P(*([None] * ndim)))
+    return NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0],
+                                 *([None] * (ndim - 1))))

@@ -1,0 +1,55 @@
+"""Fused fake-quantization Pallas kernel (paper Eq. 3).
+
+One pass over the tensor: per-channel min/max reduction, scale/offset
+derivation, quantize-clip-dequantize — fused so the tensor is read once
+from HBM instead of three times (minmax / quant / dequant). Used by the
+sensitivity analysis and QAT retraining loops where fake-quant dominates.
+
+Layout: x viewed as [R, C] with the channel axis LAST and the dynamic-range
+reduction over axis 0 (rows) — matching ``core.quantization.fake_quant``.
+Blocks tile the channel axis, (R, bc) per block, so each block owns every
+row of its channels and the reduction never crosses blocks.
+VMEM: R ≤ 16384 rows × bc=512 × 4B ≈ 32MB worst case — ops.py shrinks bc
+until the block fits a 4MB budget.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def fake_quant_kernel(x_ref, bits_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    bits = bits_ref[0].astype(jnp.float32)
+    b = jnp.clip(bits, 1.0, 31.0)
+    n = 2.0 ** b - 1.0
+    x_min = jnp.min(x, axis=0, keepdims=True)
+    x_max = jnp.max(x, axis=0, keepdims=True)
+    span = jnp.maximum(x_max - x_min, 1e-8)
+    s = n / span
+    z = jnp.floor(s * x_min) + 2.0 ** (b - 1.0)
+    q = jnp.clip(jnp.floor(s * x - z), -n, n)
+    deq = (q + z + 0.5) / s
+    out = jnp.where(bits >= 32.0, x, deq)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def fake_quant_2d(x: jnp.ndarray, bits, *, bc: int = 512,
+                  interpret: bool = True) -> jnp.ndarray:
+    """x [R, C]: quantize-dequantize with per-channel (last axis) dynamic
+    range reduced over axis 0. ``bits`` may be a traced int scalar."""
+    R, C = x.shape
+    bc = min(bc, C)
+    while C % bc != 0:           # fall back to a divisor of C
+        bc -= 1
+    bits_arr = jnp.reshape(jnp.asarray(bits, jnp.int32), (1,))
+    return pl.pallas_call(
+        fake_quant_kernel,
+        grid=(C // bc,),
+        in_specs=[pl.BlockSpec((R, bc), lambda j: (0, j)),
+                  pl.BlockSpec((1,), lambda j: (0,))],
+        out_specs=pl.BlockSpec((R, bc), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(x, bits_arr)

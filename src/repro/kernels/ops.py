@@ -1,0 +1,99 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op pads/reshapes to kernel-legal shapes, dispatches to the kernel
+(``interpret=True`` on CPU — the dev/test path; on TPU backends the same
+call compiles to Mosaic), and restores the caller's layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import fake_quant as _fq
+from repro.kernels import flash_attention as _fa
+from repro.kernels import quant_matmul as _qm
+from repro.kernels import ref as _ref
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import ssd_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("w_bits", "out_dtype"))
+def quantized_matmul(x: jnp.ndarray, w: jnp.ndarray, w_bits: int = 8,
+                     out_dtype=jnp.float32) -> jnp.ndarray:
+    """f32/bf16 x [M,K] @ w [K,N] through the int8/int4 quantized kernel:
+    quantize per-row (x) / per-col (w), integer matmul, fused dequant."""
+    M, K = x.shape
+    N = w.shape[1]
+    xq, sx, zx = _ref.quantize_rows(x, 8)
+    bits = 4 if w_bits <= 4 else 8
+    wq, sw, zw = _ref.quantize_cols(w, bits)
+    interpret = not _on_tpu()
+    bm = bk = bn = 256
+    xq = _pad_to(_pad_to(xq, bm, 0), bk, 1)
+    wq_f = _pad_to(_pad_to(wq, bk, 0), bn, 1)
+    sx_p = _pad_to(sx, bm, 0)
+    zx_p = _pad_to(zx, bm, 0)
+    sw_p = _pad_to(sw, bn, 0)
+    zw_p = _pad_to(zw, bn, 0)
+    if bits == 4:
+        wq_f = _ref.pack_int4(wq_f)
+    y = _qm.quant_matmul(xq, wq_f, sx_p, zx_p, sw_p, zw_p,
+                         packed=(bits == 4), bm=bm, bk=bk, bn=bn,
+                         out_dtype=out_dtype, k_true=K, interpret=interpret)
+    return y[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fused_fake_quant(x: jnp.ndarray, bits) -> jnp.ndarray:
+    """Per-channel (last axis) fake quant of an arbitrary-rank tensor."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    out = _fq.fake_quant_2d(x2, bits, interpret=not _on_tpu())
+    return out.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, causal: bool = True,
+                    window: int = 0) -> jnp.ndarray:
+    """q [B,H,S,D]; k,v [B,KV,S,D]."""
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=not _on_tpu())
+
+
+@jax.jit
+def rglru_scan(a, b, h0=None):
+    B, S, C = a.shape
+    bs = 128
+    while S % bs != 0:
+        bs //= 2
+    bc = 1024
+    while C % bc != 0:
+        bc //= 2
+    return _rg.rglru_scan(a, b, h0, bs=max(bs, 1), bc=max(bc, 1),
+                          interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(xh, dA, Bm, Cm, chunk: int = 256):
+    S = xh.shape[1]
+    c = min(chunk, S)
+    while S % c != 0:
+        c //= 2
+    return _ssd.ssd_scan(xh, dA, Bm, Cm, chunk=max(c, 1),
+                         interpret=not _on_tpu())

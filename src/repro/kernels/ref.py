@@ -1,0 +1,137 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` deliverable).
+
+Each function is the mathematical ground truth the kernels are tested
+against (tests/test_kernels_*.py sweep shapes/dtypes with assert_allclose).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# --- quant_matmul -----------------------------------------------------------
+
+def quantize_rows(x: jnp.ndarray, bits: int = 8):
+    """Asymmetric per-row quantization -> (q int8, scale [R], zero [R]).
+    Convention matches the kernel: x ≈ sx * (q_signed + z_corrected) via
+    x = s*(q - z_off) with q in signed range."""
+    n = 2.0 ** bits - 1.0
+    x = x.astype(jnp.float32)
+    x_min = jnp.min(x, axis=1)
+    x_max = jnp.max(x, axis=1)
+    span = jnp.maximum(x_max - x_min, 1e-8)
+    s = span / n                          # dequant scale
+    z = jnp.round(x_min / s) + 2.0 ** (bits - 1)   # zero offset
+    q = jnp.clip(jnp.round(x / s[:, None]) - z[:, None],
+                 -(2.0 ** (bits - 1)), 2.0 ** (bits - 1) - 1)
+    return q.astype(jnp.int8), s, z
+
+
+def quantize_cols(w: jnp.ndarray, bits: int = 8):
+    qT, s, z = quantize_rows(w.T, bits)
+    return qT.T, s, z
+
+
+def dequant_matmul_ref(xq, wq, sx, zx, sw, zw) -> jnp.ndarray:
+    """Ground truth for the kernel epilogue: dequantize then matmul in f32.
+    x = sx*(xq + zx), w = sw*(wq + zw)  (zero offsets are ADDED back)."""
+    x = sx[:, None] * (xq.astype(jnp.float32) + zx[:, None])
+    w = sw[None, :] * (wq.astype(jnp.float32) + zw[None, :])
+    return x @ w
+
+
+def int8_matmul_ref(xq, wq, sx, zx, sw, zw) -> jnp.ndarray:
+    """Integer-accumulation form (identical math, matches kernel exactly):
+    y = sx·sw·(acc + zx·colsum_w + zw·rowsum_x + K·zx·zw)."""
+    acc = xq.astype(jnp.int32) @ wq.astype(jnp.int32)
+    acc = acc.astype(jnp.float32)
+    rowsum = jnp.sum(xq.astype(jnp.float32), axis=1)
+    colsum = jnp.sum(wq.astype(jnp.float32), axis=0)
+    K = xq.shape[1]
+    corr = (acc + zx[:, None] * colsum[None, :]
+            + zw[None, :] * rowsum[:, None]
+            + K * zx[:, None] * zw[None, :])
+    return sx[:, None] * sw[None, :] * corr
+
+
+def pack_int4(w4: jnp.ndarray) -> jnp.ndarray:
+    """[K, N] int8 in [-8,7] -> [K//2, N] packed (low nibble = even row)."""
+    lo = w4[0::2].astype(jnp.uint8) & 0xF
+    hi = (w4[1::2].astype(jnp.uint8) & 0xF) << 4
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_int4_ref(packed: jnp.ndarray) -> jnp.ndarray:
+    low = jnp.left_shift(packed, 4)
+    low = jnp.right_shift(low, 4)
+    high = jnp.right_shift(packed, 4)
+    kk, n = packed.shape
+    return jnp.stack([low, high], 1).reshape(2 * kk, n).astype(jnp.int8)
+
+
+# --- fake_quant -------------------------------------------------------------
+
+def fake_quant_ref(x: jnp.ndarray, bits) -> jnp.ndarray:
+    """Mirror of core.quantization.fake_quant for 2-D [R, C] inputs with
+    per-channel (last axis) range over axis 0."""
+    from repro.core.quantization import fake_quant
+    return fake_quant(x, bits, axis=(0,))
+
+
+# --- flash attention --------------------------------------------------------
+
+def attention_ref(q, k, v, *, causal=True, window=0) -> jnp.ndarray:
+    """q [B,H,S,D]; k,v [B,KV,S,D] -> [B,H,S,D], dense softmax."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qq = q.reshape(B, KV, G, S, D)
+    s = jnp.einsum("bkgqd,bkld->bkgql", qq.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bkgql,bkld->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, D).astype(q.dtype)
+
+
+# --- rglru scan --------------------------------------------------------------
+
+def rglru_scan_ref(a, b, h0=None) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + b_t, sequential ground truth. [B,S,C]."""
+    B, S, C = a.shape
+    h = jnp.zeros((B, C), jnp.float32) if h0 is None else h0
+    out = []
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    for t in range(S):
+        h = af[:, t] * h + bf[:, t]
+        out.append(h)
+    return jnp.stack(out, axis=1).astype(a.dtype)
+
+
+# --- ssd scan ----------------------------------------------------------------
+
+def ssd_scan_ref(xh, dA, Bm, Cm):
+    """Sequential SSD ground truth. xh [B,S,H,P]; dA [B,S,H];
+    Bm, Cm [B,S,N]. Returns (y, final_state [B,H,P,N])."""
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    state = jnp.zeros((B, H, P, N), jnp.float32)
+    ys = []
+    for t in range(S):
+        dec = jnp.exp(dA[:, t].astype(jnp.float32))            # [B,H]
+        upd = jnp.einsum("bn,bhp->bhpn", Bm[:, t].astype(jnp.float32),
+                         xh[:, t].astype(jnp.float32))
+        state = dec[..., None, None] * state + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, t].astype(jnp.float32), state)
+        ys.append(y)
+    return jnp.stack(ys, 1).astype(xh.dtype), state

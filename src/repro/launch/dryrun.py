@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_BASE_FLAGS", "")
+                           + " --xla_force_host_platform_device_count="
+                           + os.environ.get("DRYRUN_DEVICES", "512")).strip()
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape) cell for the production meshes and extract
+the §Roofline terms from the compiled artifact.
+
+MUST be a fresh process (jax locks the device count at first init) — the
+XLA_FLAGS line above precedes every other import.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+      --shape train_4k [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--both-meshes]
+
+Writes one JSON per cell under artifacts/dryrun/<mesh>/<arch>__<shape>.json
+(resumable: existing files are skipped unless --force).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ALL_SHAPES, SHAPES_BY_NAME, cell_supported
+from repro.core.latency import V5E, hlo_collective_bytes, roofline_from_compiled
+from repro.distributed.sharding import (axis_rules, batch_sharding,
+                                        cache_shardings, param_shardings,
+                                        replicated)
+from repro.launch.inputs import input_specs, model_flops, params_shape
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.registry import ARCH_IDS, get_config
+from repro.optim.optimizer import OptimizerConfig, adamw_init
+from repro.train.train_step import make_serve_step, make_train_step
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts",
+                   "dryrun")
+
+
+def _batch_shardings(batch_specs, mesh):
+    return {k: batch_sharding(mesh, v.ndim, v.shape[0]) if k != "pos"
+            else replicated(mesh) for k, v in batch_specs.items()}
+
+
+def _lower(cfg, shape, mesh, hw=V5E, deploy_bits=None, cache_bits=16):
+    """Lower + compile one step for ``cfg``. Returns (row dict, compiled).
+    ``deploy_bits``/``cache_bits``: §Perf variants — integer weight storage
+    and quantized KV cache on the serving path."""
+
+    chips = 1
+    for a in mesh.axis_names:
+        chips *= mesh.shape[a]
+    scanned = cfg.scan_layers and cfg.homogeneous
+    t0 = time.time()
+    with axis_rules(mesh):
+        p_shape = params_shape(cfg, deploy_bits)
+        p_shard = param_shardings(p_shape, mesh, scanned=scanned)
+        batch_specs = input_specs(cfg, shape, cache_bits=cache_bits)
+
+        if shape.mode == "train":
+            opt_cfg = OptimizerConfig(
+                moment_dtype="bfloat16" if cfg.param_dtype == "bfloat16"
+                else "float32")
+            opt_shape = jax.eval_shape(
+                lambda p: adamw_init(p, opt_cfg), p_shape)
+            opt_shard = {"m": p_shard, "v": p_shard,
+                         "step": replicated(mesh)}
+            b_shard = _batch_shardings(batch_specs, mesh)
+            step = make_train_step(cfg, opt_cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, opt_shard, b_shard),
+                             out_shardings=(p_shard, opt_shard, None))
+            lowered = jitted.lower(p_shape, opt_shape, batch_specs)
+        elif shape.mode == "prefill":
+            b_shard = _batch_shardings(batch_specs, mesh)
+
+            def fwd(params, batch):
+                return M.forward(cfg, params, tokens=batch.get("tokens"),
+                                 embeds=batch.get("embeds"))
+            jitted = jax.jit(fwd, in_shardings=(p_shard, b_shard),
+                             out_shardings=None)
+            lowered = jitted.lower(p_shape, batch_specs)
+        else:  # decode
+            cache_shape = batch_specs["cache"]
+            c_shard = cache_shardings(cache_shape, mesh)
+            step = make_serve_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, c_shard,
+                              batch_sharding(
+                                  mesh, 2,
+                                  batch_specs["tokens"].shape[0]),
+                              replicated(mesh)),
+                out_shardings=(None, c_shard))
+            lowered = jitted.lower(p_shape, cache_shape,
+                                   batch_specs["tokens"],
+                                   batch_specs["pos"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mf = model_flops(cfg, shape)
+    rep = roofline_from_compiled(compiled, chips=chips, hw=hw,
+                                 model_flops=mf)
+    n_params = sum(x.size for x in jax.tree.leaves(p_shape))
+    row = {
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "axes": list(mesh.axis_names), "chips": chips,
+        "params": int(n_params),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        **{k: (v if not isinstance(v, float) else float(v))
+           for k, v in rep.summary().items()},
+        "per_collective": {k: v for k, v in rep.per_collective.items()
+                           if not k.startswith("_")},
+        "collective_counts": rep.per_collective.get("_counts", {}),
+    }
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                row[attr] = int(v)
+    # analytic bytes-per-device: params+opt live on device, sharded
+    bytes_per_dev = 0
+    for x in jax.tree.leaves(p_shape):
+        bytes_per_dev += x.size * x.dtype.itemsize
+    mult = {"train": 3.0, "prefill": 1.0, "decode": 1.0}[shape.mode]
+    row["param_state_bytes_per_dev"] = int(bytes_per_dev * mult / chips)
+    return row, compiled
+
+
+def _recombine(full_row, r1, r2, L, hw, mf, chips):
+    """Two-point extrapolation over unrolled probe compiles (XLA's
+    cost_analysis counts a while/scan body ONCE — probes at 1 and 2
+    unrolled layers give exact per-layer deltas: total = c1 + (L-1)(c2-c1))."""
+    out = dict(full_row)
+    for key in ("flops", "bytes", "collective_bytes"):
+        c1, c2 = r1[key], r2[key]
+        out[key] = c1 + (L - 1) * (c2 - c1)
+    out["per_collective"] = {
+        k: r1["per_collective"].get(k, 0.0)
+        + (L - 1) * (r2["per_collective"].get(k, 0.0)
+                     - r1["per_collective"].get(k, 0.0))
+        for k in set(r1["per_collective"]) | set(r2["per_collective"])}
+    from repro.core.latency import RooflineReport
+    rep = RooflineReport(flops=out["flops"], bytes_accessed=out["bytes"],
+                         collective_bytes=max(0.0, out["collective_bytes"]),
+                         per_collective=out["per_collective"], chips=chips,
+                         hw=hw, model_flops=mf)
+    out.update({k: (float(v) if isinstance(v, float) else v)
+                for k, v in rep.summary().items()})
+    out["extrapolated"] = True
+    return out
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh, *, hw=V5E,
+               probes: bool = True):
+    """One dry-run cell: full compile (proves sharding + memory) plus, for
+    scan-stacked archs, two unrolled probe compiles for exact roofline
+    terms (see _recombine)."""
+    shape = SHAPES_BY_NAME[shape_name]
+    cfg = get_config(arch_id)
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch_id, "shape": shape_name,
+                "skipped": reason}, None
+    if shape.mode == "train":
+        cfg = cfg.replace(remat="full")
+    row, compiled = _lower(cfg, shape, mesh, hw)
+    scanned = cfg.scan_layers and cfg.homogeneous
+    if scanned and probes:
+        chips = row["chips"]
+        mf = model_flops(cfg, shape)
+        probe1 = cfg.replace(num_layers=1, scan_layers=False)
+        probe2 = cfg.replace(num_layers=2, scan_layers=False)
+        r1, _ = _lower(probe1, shape, mesh, hw)
+        r2, _ = _lower(probe2, shape, mesh, hw)
+        row = _recombine(row, r1, r2, cfg.num_layers, hw, mf, chips)
+    row.update({"arch": arch_id, "shape": shape_name})
+    return row, compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=ART)
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    archs = list(ARCH_IDS) if args.all or args.arch is None else [args.arch]
+    shapes = [s.name for s in ALL_SHAPES] if args.all or args.shape is None \
+        else [args.shape]
+
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        mdir = os.path.join(args.out, "multipod" if mp else "singlepod")
+        os.makedirs(mdir, exist_ok=True)
+        for arch in archs:
+            for shp in shapes:
+                path = os.path.join(mdir, f"{arch}__{shp}.json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip existing] {path}")
+                    continue
+                print(f"=== {arch} × {shp} on "
+                      f"{'multipod' if mp else 'singlepod'} ===", flush=True)
+                try:
+                    row, _ = lower_cell(arch, shp, mesh)
+                except Exception as e:  # a failure here is a bug — record it
+                    row = {"arch": arch, "shape": shp, "error": str(e),
+                           "traceback": traceback.format_exc()}
+                    print(row["traceback"], flush=True)
+                with open(path, "w") as f:
+                    json.dump(row, f, indent=1)
+                keys = ("skipped", "error", "compile_s", "dominant",
+                        "step_s", "roofline_fraction")
+                print({k: row[k] for k in keys if k in row}, flush=True)
+
+
+if __name__ == "__main__":
+    main()

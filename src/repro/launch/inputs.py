@@ -1,0 +1,101 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run deliverable).
+
+``input_specs(cfg, shape)`` returns the abstract inputs for the step the
+shape cell lowers (train_step / prefill / serve_step) — weak-type-correct,
+shardable, zero allocation. ``model_flops(cfg, shape)`` provides the
+6·N·D-style useful-FLOPs denominator for §Roofline.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.compress import lm_layer_specs
+from repro.models import layers as L
+from repro.models import model as M
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                cache_bits: int = 16) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    cdt = L.dtype_of(cfg.compute_dtype)
+    if shape.mode in ("train", "prefill"):
+        batch = {}
+        if cfg.frontend == "audio_stub":
+            batch["embeds"] = _sds((B, S, cfg.d_model), cdt)
+            if shape.mode == "train":
+                batch["labels"] = _sds((B, S), jnp.int32)
+        else:
+            batch["tokens"] = _sds((B, S), jnp.int32)
+            if cfg.frontend == "vision_stub":
+                batch["embeds"] = _sds((B, cfg.frontend_len, cfg.d_model),
+                                       cdt)
+        return batch
+    # decode: one token against a cache of length S
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, B, S, dtype=cdt, cache_bits=cache_bits))
+    return {
+        "tokens": _sds((B, 1), jnp.int32),
+        "cache": cache,
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def params_shape(cfg: ArchConfig, deploy_bits=None):
+    """Abstract params; ``deploy_bits`` composes deployment quantization
+    (core/deploy.py) — still zero allocation via eval_shape."""
+    if deploy_bits is None:
+        return jax.eval_shape(lambda: M.init(cfg, jax.random.PRNGKey(0)))
+    from repro.core.deploy import quantize_params_for_deploy
+    return jax.eval_shape(lambda: quantize_params_for_deploy(
+        M.init(cfg, jax.random.PRNGKey(0)), deploy_bits))
+
+
+def _fwd_flops_per_token(cfg: ArchConfig, ctx_len: int) -> float:
+    total = 0.0
+    for s in lm_layer_specs(cfg):
+        total += s.flops_per_token
+        if s.kind == "attn_qkv":
+            S_eff = min(ctx_len, cfg.window) if cfg.attention == "sliding" \
+                else ctx_len
+            causal_frac = 0.5 if not cfg.is_encoder else 1.0
+            total += 4.0 * S_eff * s.extra["head_dim"] * cfg.num_heads \
+                * causal_frac
+        elif s.kind == "ssm_in" and cfg.ssm:
+            total += 6.0 * cfg.ssm.d_state * (cfg.ssm.expand * cfg.d_model)
+    return total
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Useful FLOPs per step: 6·N·D-style (3x forward for train)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.mode == "train":
+        return 3.0 * _fwd_flops_per_token(cfg, S) * B * S
+    if shape.mode == "prefill":
+        return _fwd_flops_per_token(cfg, S) * B * S
+    # decode: 1 token per sequence, full context attention
+    per_tok = _fwd_flops_per_token_decode(cfg, S)
+    return per_tok * B
+
+
+def _fwd_flops_per_token_decode(cfg: ArchConfig, ctx_len: int) -> float:
+    total = 0.0
+    for s in lm_layer_specs(cfg):
+        fpt = s.flops_per_token
+        if s.kind in ("moe_up", "moe_down"):
+            pass  # already top-k scaled
+        total += fpt
+        if s.kind == "attn_qkv":
+            S_eff = min(ctx_len, cfg.window) if cfg.attention == "sliding" \
+                else ctx_len
+            total += 4.0 * S_eff * s.extra["head_dim"] * cfg.num_heads
+        elif s.kind == "ssm_in" and cfg.ssm:
+            total += 6.0 * cfg.ssm.d_state * (cfg.ssm.expand * cfg.d_model)
+    return total

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — required because the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init.
+
+Topology (TPU v5e): 16×16 chips per pod (256), ICI within a pod; the
+``pod`` axis spans pods over DCN. Axes:
+  data  — batch / FSDP shards (gradient + FSDP collectives)
+  model — TP / EP shards (activation collectives)
+  pod   — extra data parallelism across pods (gradient all-reduce on DCN,
+          optionally compressed — optim/grad_compression.py)
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(data: int = 1, model: int = 1):
+    """Small mesh for tests (requires >= data*model local devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

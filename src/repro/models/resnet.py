@@ -1,0 +1,172 @@
+"""Small ResNet (the paper's own testbed family: ResNet18 / CIFAR-10) with
+channel-prunable, quantizable convs. GroupNorm replaces BatchNorm to stay
+purely functional (noted in DESIGN.md; does not change search dynamics).
+
+``cspec`` here is a list (one entry per conv, in ``layer_specs`` order) of
+``{"qs": {"w_bits","a_bits"} | None, "mask": [C_out] | None}``, plus a final
+entry for the fc head (quant only).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import fake_quant_act, fake_quant_weight
+from repro.core.spec import LayerSpec
+
+
+@dataclass(frozen=True)
+class ResNetConfig:
+    name: str = "resnet-tiny"
+    stages: Tuple[int, ...] = (2, 2, 2, 2)     # blocks per stage (ResNet18: 2,2,2,2)
+    widths: Tuple[int, ...] = (16, 32, 64, 128)
+    num_classes: int = 10
+    in_channels: int = 3
+    img_size: int = 16
+    gn_groups: int = 8
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan = kh * kw * cin
+    return {"w": jax.random.normal(key, (kh, kw, cin, cout), jnp.float32)
+            * math.sqrt(2.0 / fan)}
+
+
+def _gn(x, groups):
+    B, H, W, C = x.shape
+    g = math.gcd(groups, C)
+    xr = x.reshape(B, H, W, g, C // g)
+    mu = jnp.mean(xr, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xr, axis=(1, 2, 4), keepdims=True)
+    return ((xr - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, H, W, C)
+
+
+def _conv(p, x, stride, qs=None, mask=None):
+    w = p["w"]
+    if qs is not None:
+        x = fake_quant_act(x, qs["a_bits"])
+        w = fake_quant_weight(w, qs["w_bits"])
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if mask is not None:
+        y = y * mask[None, None, None].astype(y.dtype)
+    return y
+
+
+def init(cfg: ResNetConfig, key):
+    keys = iter(jax.random.split(key, 128))
+    params = {"stem": _conv_init(next(keys), 3, 3, cfg.in_channels,
+                                 cfg.widths[0])}
+    stages = []
+    cin = cfg.widths[0]
+    for si, (n, w) in enumerate(zip(cfg.stages, cfg.widths)):
+        blocks = []
+        for bi in range(n):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            blk = {"conv1": _conv_init(next(keys), 3, 3, cin, w),
+                   "conv2": _conv_init(next(keys), 3, 3, w, w)}
+            if stride != 1 or cin != w:
+                blk["skip"] = _conv_init(next(keys), 1, 1, cin, w)
+            blocks.append(blk)
+            cin = w
+        stages.append(blocks)
+    params["stages"] = stages
+    params["head"] = {
+        "w": jax.random.normal(next(keys), (cin, cfg.num_classes),
+                               jnp.float32) / math.sqrt(cin),
+        "b": jnp.zeros((cfg.num_classes,), jnp.float32)}
+    return params
+
+
+def _iter_convs(cfg: ResNetConfig):
+    """Yield (name, stage_idx, block_idx, which, stride, cin, cout,
+    prunable)."""
+    yield ("stem", -1, -1, "stem", 1, cfg.in_channels, cfg.widths[0], False)
+    cin = cfg.widths[0]
+    for si, (n, w) in enumerate(zip(cfg.stages, cfg.widths)):
+        for bi in range(n):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            # conv1 output channels are free to prune (internal dim)
+            yield (f"s{si}.b{bi}.conv1", si, bi, "conv1", stride, cin, w, True)
+            # conv2 feeds the residual sum — dependency, not prunable
+            yield (f"s{si}.b{bi}.conv2", si, bi, "conv2", 1, w, w, False)
+            if stride != 1 or cin != w:
+                yield (f"s{si}.b{bi}.skip", si, bi, "skip", stride, cin, w,
+                       False)
+            cin = w
+
+
+def layer_specs(cfg: ResNetConfig) -> list[LayerSpec]:
+    specs = []
+    hw = cfg.img_size
+    idx = 0
+    for (name, si, bi, which, stride, cin, cout, prunable) in _iter_convs(cfg):
+        if which == "stem":
+            pass
+        elif which == "conv1" and bi == 0 and si > 0:
+            hw = max(1, hw // 2)
+        k = 1 if which == "skip" else 3
+        px = hw * hw
+        specs.append(LayerSpec(
+            name=name, kind="conv", layer_idx=idx, in_dim=cin, out_dim=cout,
+            prunable=prunable, prune_dim=cout if prunable else 0,
+            prune_granularity=8,  # TPU sublane multiple for conv channels
+            dep_group="" if prunable else "residual",
+            quantizable=True, mix_supported=(which != "stem"),
+            flops_per_token=2.0 * k * k * cin * cout * px,
+            weight_elems=k * k * cin * cout,
+            act_elems_per_token=cin * px,
+            extra={"px": px}))
+        idx += 1
+    specs.append(LayerSpec(
+        name="head", kind="head", layer_idx=idx,
+        in_dim=cfg.widths[-1], out_dim=cfg.num_classes,
+        prunable=False, quantizable=True, mix_supported=False,
+        flops_per_token=2.0 * cfg.widths[-1] * cfg.num_classes,
+        weight_elems=cfg.widths[-1] * cfg.num_classes,
+        act_elems_per_token=cfg.widths[-1]))
+    return specs
+
+
+def forward(cfg: ResNetConfig, params, x, cspec: Optional[list] = None):
+    """x: [B, H, W, C] -> logits [B, num_classes]."""
+    def entry(i):
+        if cspec is None:
+            return None, None
+        e = cspec[i]
+        return e.get("qs"), e.get("mask")
+
+    i = 0
+    qs, mask = entry(i)
+    h = _conv(params["stem"], x, 1, qs, mask)
+    h = jax.nn.relu(_gn(h, cfg.gn_groups))
+    i += 1
+    cin = cfg.widths[0]
+    for si, blocks in enumerate(params["stages"]):
+        for bi, blk in enumerate(blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            qs, mask = entry(i)
+            y = _conv(blk["conv1"], h, stride, qs, mask)
+            y = jax.nn.relu(_gn(y, cfg.gn_groups))
+            i += 1
+            qs, mask = entry(i)
+            y = _conv(blk["conv2"], y, 1, qs, mask)
+            y = _gn(y, cfg.gn_groups)
+            i += 1
+            if "skip" in blk:
+                qs, mask = entry(i)
+                h = _conv(blk["skip"], h, stride, qs, mask)
+                i += 1
+            h = jax.nn.relu(h + y)
+    h = jnp.mean(h, axis=(1, 2))
+    w, b = params["head"]["w"], params["head"]["b"]
+    if cspec is not None and cspec[i] is not None and cspec[i].get("qs"):
+        qs = cspec[i]["qs"]
+        h = fake_quant_act(h, qs["a_bits"])
+        w = fake_quant_weight(w, qs["w_bits"])
+    return h @ w + b

@@ -1,0 +1,76 @@
+"""Gradient compression for cross-pod data parallelism (DESIGN §4).
+
+Cross-pod reductions ride the slower DCN, so we provide two compressors
+with error feedback (residual accumulation keeps convergence; Karimireddy
+et al. 2019 "Error Feedback Fixes SignSGD"):
+
+* int8 uniform quantization (per-leaf scale) — 4x traffic cut vs f32.
+* top-k sparsification (magnitude) — k-fraction of entries + indices.
+
+Both are pure-functional: state (the error residual) is a pytree carried by
+the train step; compression happens BEFORE the pod-axis psum and
+decompression after, so the in-pod ICI reduction stays full precision.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class GradCompressionConfig:
+    kind: str = "none"                 # none|int8|topk
+    topk_frac: float = 0.01
+    error_feedback: bool = True
+
+
+def init_residual(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def _int8_compress(g):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _int8_decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_mask(g, frac: float):
+    flat = jnp.abs(g.reshape(-1))
+    k = max(1, int(flat.size * frac))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(g) >= thresh).astype(g.dtype)
+
+
+def compress_grads(grads, residual, cfg: GradCompressionConfig):
+    """Returns (compressed-but-dense grads to feed the reducer, new
+    residual). Dense representation keeps the psum path uniform; the
+    traffic win is modelled by the roofline (int8 leaves are 1 byte)."""
+    if cfg.kind == "none":
+        return grads, residual
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32)
+        if cfg.error_feedback:
+            g32 = g32 + r.astype(jnp.float32)
+        if cfg.kind == "int8":
+            q, scale = _int8_compress(g32)
+            out = _int8_decompress(q, scale)
+        elif cfg.kind == "topk":
+            out = g32 * _topk_mask(g32, cfg.topk_frac)
+        else:
+            raise ValueError(cfg.kind)
+        new_r = (g32 - out) if cfg.error_feedback else r
+        return out.astype(g.dtype), new_r.astype(r.dtype)
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(residual)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([p[0] for p in pairs]),
+            tdef.unflatten([p[1] for p in pairs]))

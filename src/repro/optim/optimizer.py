@@ -1,0 +1,109 @@
+"""Optimizers and LR schedules (self-contained, sharding-friendly).
+
+AdamW with per-leaf state that inherits the parameter sharding (ZeRO-style:
+optimizer state is sharded exactly like the FSDP-sharded parameter it
+belongs to). Schedules: cosine, and WSD (warmup-stable-decay, MiniCPM
+arXiv:2404.06395) — the assigned minicpm-2b config's native schedule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"           # cosine|wsd|constant
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1            # WSD: fraction of steps in decay
+    moment_dtype: str = "float32"      # bfloat16 for >=100B archs (DESIGN §4)
+
+
+def cosine_schedule(cfg: OptimizerConfig) -> Callable:
+    def f(step):
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+        return cfg.lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return f
+
+
+def wsd_schedule(cfg: OptimizerConfig) -> Callable:
+    """Warmup-Stable-Decay: linear warmup, flat plateau, sharp decay tail."""
+    decay_start = int(cfg.total_steps * (1.0 - cfg.decay_frac))
+
+    def f(step):
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        in_decay = step > decay_start
+        t = jnp.clip((step - decay_start)
+                     / max(1, cfg.total_steps - decay_start), 0.0, 1.0)
+        decay = jnp.where(in_decay, 1.0 - t * (1.0 - 0.1), 1.0)
+        return cfg.lr * warm * decay
+    return f
+
+
+def get_schedule(cfg: OptimizerConfig) -> Callable:
+    return {"cosine": cosine_schedule, "wsd": wsd_schedule,
+            "constant": lambda c: (lambda s: c.lr)}[cfg.schedule](cfg)
+
+
+def adamw_init(params, cfg: OptimizerConfig):
+    mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+
+    def zeros(p):
+        return jnp.zeros(p.shape, mdt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: OptimizerConfig,
+                 schedule: Optional[Callable] = None):
+    """Returns (new_params, new_state, metrics)."""
+    sched = schedule or get_schedule(cfg)
+    step = state["step"] + 1
+    lr = sched(step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    b1, b2 = cfg.betas
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m32 = b1 * m32 + (1 - b1) * g
+        v32 = b2 * v32 + (1 - b2) * g * g
+        upd = (m32 / c1) / (jnp.sqrt(v32 / c2) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * upd
+        return (newp.astype(p.dtype), m32.astype(m.dtype),
+                v32.astype(v.dtype))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return (new_p, {"m": new_m, "v": new_v, "step": step},
+            {"grad_norm": gnorm, "lr": lr})

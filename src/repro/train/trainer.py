@@ -1,0 +1,149 @@
+"""Training loop with checkpoint/restart, failure detection and straggler
+mitigation hooks — the driver behind ``repro.launch.train``.
+
+Also provides ``train_testbed_lm`` / ``train_testbed_resnet``: quick CPU
+trainers for the Galen search testbeds (the stand-ins for the paper's
+trained ResNet18, see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpointing as ckpt
+from repro.configs.base import ArchConfig
+from repro.distributed.fault_tolerance import (FaultToleranceConfig,
+                                               StepMonitor)
+from repro.models import model as M
+from repro.optim.optimizer import OptimizerConfig, adamw_init
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 1000
+    log_every: int = 50
+    ckpt_every: int = 200
+    ckpt_dir: Optional[str] = None
+    ft: FaultToleranceConfig = field(default_factory=FaultToleranceConfig)
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, opt_cfg: OptimizerConfig,
+                 tcfg: TrainerConfig, params=None, seed: int = 0,
+                 cspec=None):
+        self.cfg, self.opt_cfg, self.tcfg = cfg, opt_cfg, tcfg
+        self.params = params if params is not None \
+            else M.init(cfg, jax.random.PRNGKey(seed))
+        self.opt_state = adamw_init(self.params, opt_cfg)
+        self.step_fn = jax.jit(make_train_step(cfg, opt_cfg, cspec=cspec))
+        self.step = 0
+        self.monitor = StepMonitor(tcfg.ft)
+        self.ckpt = (ckpt.AsyncCheckpointer(tcfg.ckpt_dir)
+                     if tcfg.ckpt_dir else None)
+
+    def maybe_restore(self):
+        if self.ckpt is None:
+            return
+        tree = {"params": self.params, "opt": self.opt_state}
+        restored, step, extra = ckpt.restore_latest(self.tcfg.ckpt_dir, tree)
+        if restored is not None:
+            self.params = restored["params"]
+            self.opt_state = restored["opt"]
+            self.step = step
+            print(f"[trainer] resumed from step {step}")
+
+    def fit(self, data_iter, eval_fn: Optional[Callable] = None):
+        history = []
+        for batch in data_iter:
+            if self.step >= self.tcfg.total_steps:
+                break
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            self.step += 1
+            dt = time.perf_counter() - t0
+            self.monitor.record(self.step, dt)
+            if self.step % self.tcfg.log_every == 0:
+                loss = float(metrics["loss"])
+                row = {"step": self.step, "loss": loss, "dt": dt}
+                if eval_fn is not None:
+                    row["eval"] = float(eval_fn(self.params))
+                history.append(row)
+            if self.ckpt and self.step % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(self.step, {"params": self.params,
+                                           "opt": self.opt_state},
+                               extra={"data_step": self.step})
+        if self.ckpt:
+            self.ckpt.save(self.step, {"params": self.params,
+                                       "opt": self.opt_state},
+                           extra={"data_step": self.step})
+            self.ckpt.wait()
+        return history
+
+
+# ---------------------------------------------------------------------------
+# Testbed trainers (CPU, minutes) — produce the trained models the Galen
+# search compresses in benchmarks/ and examples/.
+# ---------------------------------------------------------------------------
+
+def train_testbed_lm(cfg: ArchConfig, steps: int = 300, batch: int = 32,
+                     seq: int = 64, seed: int = 0, lr: float = 3e-3):
+    from repro.data.pipeline import bigram_lm, make_bigram_table, \
+        sample_bigram
+    params = M.init(cfg, jax.random.PRNGKey(seed))
+    opt_cfg = OptimizerConfig(lr=lr, warmup_steps=20, total_steps=steps,
+                              weight_decay=0.0)
+    opt_state = adamw_init(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    table = make_bigram_table(cfg.vocab_size, seed)
+    for s in range(steps):
+        toks = sample_bigram(table, batch, seq, seed * 10_000 + s)
+        params, opt_state, m = step_fn(params, opt_state,
+                                       {"tokens": jnp.asarray(toks)})
+    val = {"tokens": jnp.asarray(
+        sample_bigram(table, 64, seq, seed * 10_000 + steps + 7))}
+    logits = M.forward(cfg, params, tokens=val["tokens"])
+    acc = float(jnp.mean((jnp.argmax(logits[:, :-1], -1)
+                          == val["tokens"][:, 1:])))
+    return params, val, acc
+
+
+def train_testbed_resnet(rcfg, steps: int = 250, batch: int = 64,
+                         seed: int = 0, lr: float = 1e-2):
+    from repro.data.pipeline import blob_images
+    from repro.models import resnet as R
+    params = R.init(rcfg, jax.random.PRNGKey(seed))
+    opt_cfg = OptimizerConfig(lr=lr, warmup_steps=10, total_steps=steps,
+                              weight_decay=1e-4)
+    opt_state = adamw_init(params, opt_cfg)
+
+    def loss_fn(p, batch):
+        logits = R.forward(rcfg, p, batch["images"])
+        lp = jax.nn.log_softmax(logits, -1)
+        return -jnp.mean(jnp.take_along_axis(
+            lp, batch["labels"][:, None], -1))
+
+    from repro.optim.optimizer import adamw_update, get_schedule
+    sched = get_schedule(opt_cfg)
+
+    @jax.jit
+    def step_fn(p, st, b):
+        loss, g = jax.value_and_grad(loss_fn)(p, b)
+        p, st, _ = adamw_update(p, g, st, opt_cfg, sched)
+        return p, st, loss
+
+    for s in range(steps):
+        b = blob_images(rcfg.num_classes, batch, rcfg.img_size,
+                        seed=seed * 10_000 + s)
+        params, opt_state, loss = step_fn(params, opt_state, b)
+    val = blob_images(rcfg.num_classes, 256, rcfg.img_size,
+                      seed=seed * 10_000 + steps + 7)
+    logits = R.forward(rcfg, params, val["images"])
+    acc = float(jnp.mean((jnp.argmax(logits, -1) == val["labels"])))
+    return params, val, acc

@@ -1,0 +1,51 @@
+import os
+import sys
+
+# Tests must see ONE device (the dry-run sets its own flags in a fresh
+# process). Keep compilation light.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_lm():
+    """Small untrained LM + batch for mechanics tests (fast)."""
+    import jax.numpy as jnp
+    from repro.configs.base import ArchConfig
+    from repro.core.compress import CompressibleLM
+    from repro.data.pipeline import bigram_lm
+    from repro.models import model as M
+
+    cfg = ArchConfig(name="t", num_layers=3, d_model=64, num_heads=4,
+                     num_kv_heads=2, head_dim=16, d_ff=256, vocab_size=128,
+                     scan_layers=True)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    batch = bigram_lm(cfg.vocab_size, 8, 32, seed=3)
+    return CompressibleLM(cfg, params), batch
+
+
+@pytest.fixture(scope="session")
+def tiny_resnet():
+    from repro.core.compress import CompressibleResNet
+    from repro.data.pipeline import blob_images
+    from repro.models import resnet as R
+
+    cfg = R.ResNetConfig(stages=(1, 1), widths=(8, 16), img_size=8,
+                         num_classes=4)
+    params = R.init(cfg, jax.random.PRNGKey(0))
+    batch = blob_images(4, 16, 8, seed=5)
+    return CompressibleResNet(cfg, params), batch

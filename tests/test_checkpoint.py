@@ -1,0 +1,82 @@
+"""Checkpoint: atomic save/restore, LATEST pointer, async, GC."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointing as C
+
+
+def tree():
+    return {"params": {"w": jnp.arange(6.0).reshape(2, 3),
+                       "b": jnp.zeros((3,))},
+            "opt": {"step": jnp.int32(7), "nested": [jnp.ones((2,))]}}
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    C.save(str(tmp_path), 10, t, extra={"data_step": 10})
+    restored, extra = C.restore(str(tmp_path), 10, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert extra["data_step"] == 10
+
+
+def test_latest_pointer(tmp_path):
+    t = tree()
+    C.save(str(tmp_path), 5, t)
+    C.save(str(tmp_path), 9, t)
+    assert C.latest_step(str(tmp_path)) == 9
+    restored, step, _ = C.restore_latest(str(tmp_path), t)
+    assert step == 9
+
+
+def test_gc_keeps_recent(tmp_path):
+    t = tree()
+    for s in (1, 2, 3, 4, 5):
+        C.save(str(tmp_path), s, t, keep=2)
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_4", "step_5"]
+
+
+def test_async_checkpointer(tmp_path):
+    ck = C.AsyncCheckpointer(str(tmp_path))
+    t = tree()
+    ck.save(3, t)
+    ck.wait()
+    restored, step, _ = C.restore_latest(str(tmp_path), t)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(t["params"]["w"]))
+
+
+def test_restore_missing_returns_none(tmp_path):
+    out, step, extra = C.restore_latest(str(tmp_path), tree())
+    assert out is None and step is None
+
+
+def test_trainer_resume(tmp_path):
+    """Trainer checkpoints and resumes at the right step (restart safety)."""
+    from repro.configs.base import ArchConfig
+    from repro.data.pipeline import bigram_lm
+    from repro.optim.optimizer import OptimizerConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = ArchConfig(name="ck", num_layers=1, d_model=32, num_heads=2,
+                     num_kv_heads=2, head_dim=16, d_ff=64, vocab_size=64)
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=6)
+    tcfg = TrainerConfig(total_steps=6, ckpt_every=3, log_every=2,
+                         ckpt_dir=str(tmp_path))
+    tr = Trainer(cfg, ocfg, tcfg, seed=0)
+    data = (bigram_lm(64, 4, 16, seed=i) for i in range(100))
+    tr.fit(data)
+    assert C.latest_step(str(tmp_path)) == 6
+
+    tr2 = Trainer(cfg, ocfg, tcfg, seed=1)   # different init
+    tr2.maybe_restore()
+    assert tr2.step == 6
+    a = jax.tree.leaves(tr.params)[0]
+    b = jax.tree.leaves(tr2.params)[0]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,94 @@
+"""Compression application tests: cspec structure invariance, mask counts,
+deployment slicing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core.compress import (CompressibleLM, lm_layer_specs,
+                                 slice_lm_params)
+from repro.core.policy import Policy
+from repro.core.spec import LayerCMP
+from repro.models import model as M
+
+
+def test_cspec_structure_invariant(tiny_lm):
+    cm, _ = tiny_lm
+    ref = Policy.reference(cm.specs)
+    agg = Policy([LayerCMP(keep=max(1, s.prune_dim // 2) if s.prune_dim
+                           else 0, mode="INT8", w_bits=8, a_bits=8)
+                  for s in cm.specs])
+    c1 = cm.build_cspec(ref)
+    c2 = cm.build_cspec(agg)
+    assert (jax.tree_util.tree_structure(c1)
+            == jax.tree_util.tree_structure(c2))
+    # same SHAPES too -> single jit compilation serves the search
+    s1 = jax.tree.map(lambda x: x.shape, c1)
+    s2 = jax.tree.map(lambda x: x.shape, c2)
+    assert s1 == s2
+
+
+def test_mask_counts(tiny_lm):
+    cm, _ = tiny_lm
+    pol = Policy.reference(cm.specs)
+    for i, s in enumerate(cm.specs):
+        if s.kind == "mlp_up":
+            pol.cmps[i] = LayerCMP(keep=128)
+    cs = cm.build_cspec(pol)
+    ffm = cs["blocks"]["mlp"]["ff_mask"]     # [L, ff]
+    counts = np.asarray(jnp.sum(ffm, axis=-1))
+    assert (counts == 128).all()
+
+
+def test_compression_changes_outputs(tiny_lm):
+    cm, batch = tiny_lm
+    ref = cm.build_cspec(Policy.reference(cm.specs))
+    hard = cm.build_cspec(Policy([
+        LayerCMP(keep=max(1, s.prune_dim // 4) if s.prune_dim else 0,
+                 mode="MIX", w_bits=2, a_bits=2) for s in cm.specs]))
+    lo_ref = cm.logits(batch, ref)
+    lo_hard = cm.logits(batch, hard)
+    assert float(jnp.mean(jnp.abs(lo_ref - lo_hard))) > 1e-3
+
+
+def test_reference_cspec_is_identity(tiny_lm):
+    cm, batch = tiny_lm
+    plain = cm.logits(batch, None)
+    ref = cm.logits(batch, cm.build_cspec(Policy.reference(cm.specs)))
+    np.testing.assert_allclose(np.asarray(plain), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_slice_lm_params_shapes():
+    cfg = ArchConfig(name="u", num_layers=2, d_model=64, num_heads=4,
+                     num_kv_heads=2, head_dim=16, d_ff=256, vocab_size=64,
+                     scan_layers=False)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    cm = CompressibleLM(cfg, params)
+    pol = Policy.reference(cm.specs)
+    for i, s in enumerate(cm.specs):
+        if s.kind == "mlp_up":
+            pol.cmps[i] = LayerCMP(keep=128)
+    cs = cm.build_cspec(pol)
+    sliced = slice_lm_params(cfg, params, cs)
+    for blk in sliced["blocks"]:
+        assert blk["mlp"]["w_up"]["w"].shape == (64, 128)
+        assert blk["mlp"]["w_down"]["w"].shape == (128, 64)
+    # sliced model still runs
+    toks = jnp.zeros((1, 8), jnp.int32)
+    cfg_r = cfg.replace(d_ff=128)
+    out = M.forward(cfg_r, sliced, tokens=toks)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_specs_cover_all_layer_kinds():
+    for name, kw in [
+        ("moe", dict(moe__num_experts=4)),
+    ]:
+        pass
+    cfg = ArchConfig(name="m", num_layers=2, d_model=64, num_heads=4,
+                     num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=64)
+    kinds = {s.kind for s in lm_layer_specs(cfg)}
+    assert {"embed", "attn_qkv", "attn_out", "mlp_up", "mlp_down",
+            "head"} <= kinds

@@ -1,0 +1,66 @@
+"""DDPG agent learning tests on synthetic control problems."""
+import numpy as np
+import pytest
+
+from repro.core.ddpg import DDPGAgent, DDPGConfig, RunningNorm
+from repro.core.replay import ReplayBuffer
+
+
+def test_replay_circular():
+    buf = ReplayBuffer(4, 2, 1)
+    for i in range(6):
+        buf.push([i, i], [i], float(i), [i + 1, i + 1], i == 5)
+    assert len(buf) == 4
+    s, a, r, s2, d = buf.sample(8)
+    assert s.shape == (8, 2)
+    assert set(np.unique(r)) <= {2.0, 3.0, 4.0, 5.0}  # oldest evicted
+
+
+def test_running_norm():
+    rn = RunningNorm(3)
+    data = np.random.default_rng(0).normal(5.0, 2.0, (500, 3)).astype(
+        np.float32)
+    for i in range(0, 500, 50):
+        rn.update(data[i:i + 50])
+    np.testing.assert_allclose(rn.mean, 5.0, atol=0.3)
+    np.testing.assert_allclose(np.sqrt(rn.var), 2.0, atol=0.3)
+    z = rn.normalize(data)
+    assert abs(z.mean()) < 0.1
+
+
+def test_agent_learns_bandit():
+    """1-step continuous bandit: reward = -(a - 0.7)^2. The actor should
+    move toward 0.7."""
+    cfg = DDPGConfig(state_dim=2, action_dim=1, hidden=(32, 32),
+                     batch_size=32, buffer_size=512, warmup_episodes=0,
+                     actor_lr=1e-3, critic_lr=1e-2, gamma=0.0)
+    agent = DDPGAgent(cfg, seed=0)
+    buf = ReplayBuffer(512, 2, 1, seed=0)
+    rng = np.random.default_rng(0)
+    s = np.zeros(2, np.float32)
+    for i in range(256):
+        a = rng.uniform(0, 1, 1).astype(np.float32)
+        r = -(float(a[0]) - 0.7) ** 2
+        buf.push(s, a, r, s, True)
+    agent.observe_states(np.zeros((4, 2), np.float32))
+    for _ in range(300):
+        agent.update(buf)
+    a_final = agent.act(s, sigma=0.0)
+    assert abs(float(a_final[0]) - 0.7) < 0.15
+
+
+def test_sigma_decay():
+    cfg = DDPGConfig(warmup_episodes=5, sigma0=0.5, sigma_decay=0.9)
+    agent = DDPGAgent(cfg, seed=0)
+    assert agent.sigma_at(0) == pytest.approx(0.5)   # during warmup
+    assert agent.sigma_at(5) == pytest.approx(0.5)
+    assert agent.sigma_at(15) == pytest.approx(0.5 * 0.9 ** 10)
+
+
+def test_actions_bounded():
+    cfg = DDPGConfig(state_dim=4, action_dim=3)
+    agent = DDPGAgent(cfg, seed=1)
+    for sigma in (0.0, 0.3, 1.0):
+        a = agent.act(np.random.randn(4).astype(np.float32), sigma)
+        assert a.shape == (3,)
+        assert (a >= 0).all() and (a <= 1).all()

@@ -1,0 +1,94 @@
+"""Deployment-mode quantization + quantized KV cache + sharded CE tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core.deploy import (deployed_bytes, quantize_params_for_deploy,
+                               quantize_weight, unpack_int4_weight)
+from repro.models import model as M
+
+CFG = ArchConfig(name="dep", num_layers=2, d_model=64, num_heads=4,
+                 num_kv_heads=2, head_dim=16, d_ff=256, vocab_size=128,
+                 compute_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init(CFG, jax.random.PRNGKey(0))
+
+
+def test_int8_container_roundtrip():
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    c = quantize_weight(w, 8)
+    back = c["w_q"].astype(jnp.float32) * c["w_scale"]
+    rel = float(jnp.linalg.norm(back - w) / jnp.linalg.norm(w))
+    assert rel < 0.01
+
+
+def test_int4_container_roundtrip():
+    w = jax.random.normal(jax.random.PRNGKey(2), (32, 16))
+    c = quantize_weight(w, 4)
+    assert c["w_p"].shape == (16, 16)          # packed 2/byte along K
+    back = unpack_int4_weight(c["w_p"]).astype(jnp.float32) * c["w_scale"]
+    rel = float(jnp.linalg.norm(back - w) / jnp.linalg.norm(w))
+    assert rel < 0.15
+
+
+def test_int4_container_3d_moe():
+    w = jax.random.normal(jax.random.PRNGKey(3), (4, 32, 16))  # [E, d, ff]
+    c = quantize_weight(w, 4)
+    back = unpack_int4_weight(c["w_p"]).astype(jnp.float32) * c["w_scale"]
+    assert back.shape == w.shape
+    rel = float(jnp.linalg.norm(back - w) / jnp.linalg.norm(w))
+    assert rel < 0.15
+
+
+@pytest.mark.parametrize("bits,max_rel,max_ratio", [(8, 0.1, 0.30),
+                                                    (4, 0.6, 0.17)])
+def test_deployed_forward(params, bits, max_rel, max_ratio):
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 16), 0, 128)
+    base = M.forward(CFG, params, tokens=toks)
+    qp = quantize_params_for_deploy(params, bits)
+    out = M.forward(CFG, qp, tokens=toks)
+    rel = float(jnp.linalg.norm(out - base) / jnp.linalg.norm(base))
+    assert rel < max_rel
+    assert deployed_bytes(qp) / deployed_bytes(params) < max_ratio
+
+
+def test_quantized_cache_decode(params):
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 12), 0, 128)
+    full = M.forward(CFG, params, tokens=toks)
+    cache = M.init_cache(CFG, 2, 12, dtype=jnp.float32, cache_bits=8)
+    assert cache["k"].dtype == jnp.int8
+    outs = []
+    for t in range(12):
+        lg, cache = M.decode_step(CFG, params, cache, toks[:, t:t + 1], t)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, 1)
+    rel = float(jnp.linalg.norm(dec - full) / jnp.linalg.norm(full))
+    assert rel < 0.05   # int8 cache ~1% noise
+
+
+def test_sharded_ce_matches_log_softmax():
+    from repro.train.train_step import _sharded_ce
+    logits = jax.random.normal(jax.random.PRNGKey(6), (4, 8, 32))
+    labels = jax.random.randint(jax.random.PRNGKey(7), (4, 8), 0, 32)
+    want = -jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                labels[..., None], -1)[..., 0]
+    got = _sharded_ce(logits, labels)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_moe_deploy(params):
+    from repro.configs.base import MoEConfig
+    cfg = CFG.replace(moe=MoEConfig(num_experts=4, top_k=2))
+    p = M.init(cfg, jax.random.PRNGKey(8))
+    toks = jax.random.randint(jax.random.PRNGKey(9), (2, 16), 0, 128)
+    base = M.forward(cfg, p, tokens=toks)
+    qp = quantize_params_for_deploy(p, 8)
+    out = M.forward(cfg, qp, tokens=toks)
+    rel = float(jnp.linalg.norm(out - base) / jnp.linalg.norm(base))
+    assert rel < 0.1

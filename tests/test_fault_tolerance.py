@@ -1,0 +1,47 @@
+"""Fault-tolerance substrate: stragglers, heartbeats, elastic re-mesh."""
+import pytest
+
+from repro.distributed.fault_tolerance import (FaultToleranceConfig,
+                                               HealthLedger, StepMonitor,
+                                               StepTimeout, elastic_data_axis)
+
+
+def test_straggler_detection():
+    mon = StepMonitor(FaultToleranceConfig(straggler_factor=2.0))
+    for i in range(20):
+        mon.record(i, 0.1)
+    mon.record(20, 0.5)                 # 5x median -> straggler
+    assert 20 in mon.stragglers
+    mon.record(21, 0.11)
+    assert 21 not in mon.stragglers
+
+
+def test_hard_timeout():
+    mon = StepMonitor(FaultToleranceConfig(hard_timeout_s=1.0))
+    for i in range(10):
+        mon.record(i, 0.1)
+    with pytest.raises(StepTimeout):
+        mon.record(10, 2.0)
+
+
+def test_health_ledger():
+    cfg = FaultToleranceConfig(heartbeat_timeout_s=10.0)
+    led = HealthLedger(4, cfg)
+    now = 1000.0
+    for h in range(4):
+        led.heartbeat(h, now)
+    led.heartbeat(0, now + 20)
+    led.heartbeat(1, now + 20)
+    led.heartbeat(2, now + 20)
+    failed = led.failed_hosts(now + 21)
+    assert failed == [3]
+    led.exclude(failed)
+    assert led.healthy == [0, 1, 2]
+    assert led.failed_hosts(now + 21) == []
+
+
+def test_elastic_data_axis():
+    # 64 hosts x 4 chips, model=16 -> data=16; lose 3 hosts -> data=8
+    assert elastic_data_axis(64, 4, 16) == 16
+    assert elastic_data_axis(61, 4, 16) == 8
+    assert elastic_data_axis(1, 4, 16) == 1

@@ -1,0 +1,166 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.quant_matmul import quant_matmul
+
+
+# --------------------------- quant matmul ----------------------------------
+
+@pytest.mark.parametrize("M,K,N", [(64, 128, 64), (200, 300, 130),
+                                   (256, 256, 256), (33, 512, 257)])
+def test_int8_matmul_matches_int_ref(M, K, N):
+    x = jax.random.normal(jax.random.PRNGKey(M), (M, K))
+    w = jax.random.normal(jax.random.PRNGKey(N), (K, N))
+    y = ops.quantized_matmul(x, w, w_bits=8)
+    xq, sx, zx = ref.quantize_rows(x, 8)
+    wq, sw, zw = ref.quantize_cols(w, 8)
+    yr = ref.int8_matmul_ref(xq, wq, sx, zx, sw, zw)
+    # int32 accumulation is exact; the f32 zero-point correction sums can
+    # exceed 2^24 so kernel/ref may differ by f32 association noise.
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-3, atol=0.1)
+
+
+@pytest.mark.parametrize("M,K,N", [(64, 128, 64), (100, 256, 96)])
+def test_int8_matmul_close_to_f32(M, K, N):
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, K))
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+    y = ops.quantized_matmul(x, w, w_bits=8)
+    rel = float(jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w))
+    assert rel < 0.03
+
+
+def test_int4_matmul():
+    x = jax.random.normal(jax.random.PRNGKey(2), (128, 256))
+    w = jax.random.normal(jax.random.PRNGKey(3), (256, 128))
+    y = ops.quantized_matmul(x, w, w_bits=4)
+    rel = float(jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w))
+    assert rel < 0.2  # 4-bit weights on gaussian data
+
+
+def test_int4_pack_unpack_roundtrip():
+    w4 = jax.random.randint(jax.random.PRNGKey(4), (64, 32), -8, 8) \
+        .astype(jnp.int8)
+    assert bool(jnp.all(ref.unpack_int4_ref(ref.pack_int4(w4)) == w4))
+
+
+def test_quant_matmul_block_shapes():
+    """Kernel correct for several BlockSpec tilings."""
+    M = K = N = 512
+    x = jax.random.normal(jax.random.PRNGKey(5), (M, K))
+    w = jax.random.normal(jax.random.PRNGKey(6), (K, N))
+    xq, sx, zx = ref.quantize_rows(x, 8)
+    wq, sw, zw = ref.quantize_cols(w, 8)
+    yr = ref.int8_matmul_ref(xq, wq, sx, zx, sw, zw)
+    for bm, bk, bn in [(128, 128, 128), (256, 512, 128), (512, 256, 256)]:
+        y = quant_matmul(xq, wq, sx, zx, sw, zw, bm=bm, bk=bk, bn=bn,
+                         interpret=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4,
+                                   atol=1e-3)
+
+
+# --------------------------- fake quant ------------------------------------
+
+@pytest.mark.parametrize("shape", [(64, 32), (128, 100), (7, 257)])
+@pytest.mark.parametrize("bits", [2, 4, 8, 32])
+def test_fake_quant_kernel(shape, bits):
+    x = jax.random.normal(jax.random.PRNGKey(bits), shape)
+    a = ops.fused_fake_quant(x, bits)
+    b = ref.fake_quant_ref(x, bits)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fake_quant_dtypes(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 16)).astype(dtype)
+    a = ops.fused_fake_quant(x, 8)
+    assert a.dtype == dtype
+
+
+# --------------------------- flash attention -------------------------------
+
+@pytest.mark.parametrize("S,H,KV,D", [(128, 4, 4, 32), (200, 8, 2, 16),
+                                      (512, 4, 1, 64)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 96)])
+def test_flash_attention(S, H, KV, D, causal, window):
+    B = 2
+    q = jax.random.normal(jax.random.PRNGKey(S), (B, H, S, D))
+    k = jax.random.normal(jax.random.PRNGKey(S + 1), (B, KV, S, D))
+    v = jax.random.normal(jax.random.PRNGKey(S + 2), (B, KV, S, D))
+    a = ops.flash_attention(q, k, v, causal=causal, window=window)
+    b = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 128, 32),
+                          jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 128, 32),
+                          jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 128, 32),
+                          jnp.bfloat16)
+    a = ops.flash_attention(q, k, v)
+    b = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=0.04)
+
+
+# --------------------------- rglru scan ------------------------------------
+
+@pytest.mark.parametrize("B,S,C", [(2, 64, 96), (1, 128, 32), (3, 48, 256)])
+def test_rglru_scan(B, S, C):
+    a = jax.random.uniform(jax.random.PRNGKey(B), (B, S, C),
+                           minval=0.4, maxval=0.99)
+    b = jax.random.normal(jax.random.PRNGKey(S), (B, S, C))
+    out = ops.rglru_scan(a, b)
+    want = ref.rglru_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_rglru_scan_initial_state():
+    B, S, C = 2, 32, 64
+    a = jax.random.uniform(jax.random.PRNGKey(0), (B, S, C), minval=0.5,
+                           maxval=0.95)
+    b = jax.random.normal(jax.random.PRNGKey(1), (B, S, C))
+    h0 = jax.random.normal(jax.random.PRNGKey(2), (B, C))
+    out = ops.rglru_scan(a, b, h0)
+    want = ref.rglru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+# --------------------------- ssd scan --------------------------------------
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [(2, 64, 4, 16, 8, 16),
+                                             (1, 128, 2, 32, 16, 32),
+                                             (2, 96, 3, 8, 8, 32)])
+def test_ssd_scan(B, S, H, P, N, chunk):
+    xh = jax.random.normal(jax.random.PRNGKey(B), (B, S, H, P))
+    dA = -jax.random.uniform(jax.random.PRNGKey(S), (B, S, H), maxval=0.5)
+    Bm = jax.random.normal(jax.random.PRNGKey(H), (B, S, N))
+    Cm = jax.random.normal(jax.random.PRNGKey(P), (B, S, N))
+    y, fin = ops.ssd_scan(xh, dA, Bm, Cm, chunk=chunk)
+    yr, fr = ref.ssd_scan_ref(xh, dA, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(fr), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_matches_model_path():
+    """Kernel agrees with the chunked jnp path used inside mamba2 blocks."""
+    from repro.models.blocks import ssd_chunked
+    B, S, H, P, N = 1, 64, 2, 16, 8
+    xh = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, P))
+    dA = -jax.random.uniform(jax.random.PRNGKey(1), (B, S, H), maxval=0.3)
+    Bm = jax.random.normal(jax.random.PRNGKey(2), (B, S, N))
+    Cm = jax.random.normal(jax.random.PRNGKey(3), (B, S, N))
+    y_model, f_model = ssd_chunked(xh, dA, Bm, Cm, chunk=16)
+    y_kern, f_kern = ops.ssd_scan(xh, dA, Bm, Cm, chunk=16)
+    np.testing.assert_allclose(np.asarray(y_model), np.asarray(y_kern),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(f_model), np.asarray(f_kern),
+                               rtol=2e-4, atol=2e-4)

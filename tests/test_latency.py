@@ -1,0 +1,88 @@
+"""Latency-oracle properties + HLO collective parsing."""
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core.compress import lm_layer_specs
+from repro.core.constraints import legalize
+from repro.core.latency import (V5E, LatencyContext, hlo_collective_bytes,
+                                policy_latency)
+from repro.core.policy import Policy
+from repro.core.spec import LayerCMP
+
+CFG = ArchConfig(name="o", num_layers=4, d_model=256, num_heads=8,
+                 num_kv_heads=4, head_dim=32, d_ff=1024, vocab_size=512)
+SPECS = lm_layer_specs(CFG)
+CTX = LatencyContext(tokens=1, seq_ctx=512, mode="decode", batch=1)
+
+
+def mk(mode="FP32", wb=32, ab=32, keep=1.0):
+    pol = Policy([LayerCMP(keep=max(1, int(s.prune_dim * keep))
+                           if s.prune_dim else 0,
+                           mode=mode, w_bits=wb, a_bits=ab) for s in SPECS])
+    for s, c in zip(SPECS, pol.cmps):
+        legalize(s, c)
+    return pol
+
+
+def total(pol, ctx=CTX):
+    return policy_latency(SPECS, pol, V5E, ctx).total_s
+
+
+def test_quant_monotone():
+    assert total(mk("INT8", 8, 8)) < total(mk("FP32"))
+    assert total(mk("MIX", 4, 4)) < total(mk("INT8", 8, 8))
+
+
+def test_mix6_no_better_than_int8():
+    """The TPU truth the paper found on ARM: 5-6 bit MIX buys nothing."""
+    assert total(mk("MIX", 6, 6)) >= total(mk("INT8", 8, 8)) * 0.999
+
+
+def test_prune_monotone():
+    lats = [total(mk(keep=k)) for k in (1.0, 0.5, 0.25)]
+    assert lats[0] > lats[1] > lats[2]
+
+
+def test_padding_staircase():
+    """Kept counts within one 128-granule cost the same (MXU padding)."""
+    s = [sp for sp in SPECS if sp.kind == "mlp_up"][0]
+    pol_a, pol_b = mk(), mk()
+    i = SPECS.index(s)
+    pol_a.cmps[i] = LayerCMP(keep=257)     # pads to 384
+    pol_b.cmps[i] = LayerCMP(keep=384)
+    la = policy_latency(SPECS, pol_a, V5E, CTX)
+    lb = policy_latency(SPECS, pol_b, V5E, CTX)
+    assert la.units[i].compute_s == pytest.approx(lb.units[i].compute_s)
+
+
+def test_chips_scale():
+    c2 = LatencyContext(tokens=1, seq_ctx=512, mode="decode", chips=4)
+    assert total(mk(), c2) < total(mk(), CTX)
+
+
+def test_decode_cache_term_present():
+    lat = policy_latency(SPECS, mk(), V5E, CTX)
+    names = [u.name for u in lat.units]
+    assert any(n.endswith(".attn") for n in names)
+
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[4,256]{1,0} all-gather(bf16[1,256]{1,0} %p0), replica_groups={}
+  %ar.1 = f32[128]{0} all-reduce(f32[128]{0} %x), to_apply=%add
+  %ar2 = f32[64,2]{1,0} all-reduce-start(f32[64,2]{1,0} %y), to_apply=%add
+  %rs = (f32[32]{0}, f32[32]{0}) reduce-scatter(f32[64]{0} %z, f32[64]{0} %w)
+  %cp = u8[16]{0} collective-permute(u8[16]{0} %q)
+  %a2a = s8[8,8]{1,0} all-to-all(s8[8,8]{1,0} %r)
+}
+"""
+
+
+def test_hlo_collective_parse():
+    out = hlo_collective_bytes(HLO)
+    assert out["all-gather"] == 4 * 256 * 2
+    assert out["all-reduce"] == 128 * 4 + 64 * 2 * 4
+    assert out["reduce-scatter"] == 32 * 4 * 2
+    assert out["collective-permute"] == 16
+    assert out["all-to-all"] == 64
+    assert out["_counts"]["all-reduce"] == 2

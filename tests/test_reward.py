@@ -1,0 +1,39 @@
+"""Reward function tests (paper Eq. 6)."""
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.core.reward import (RewardConfig, absolute_reward, compute_reward,
+                               hard_exponential_reward)
+
+
+def test_max_at_target():
+    """Reward is maximized exactly at T = c * T_ref."""
+    base = absolute_reward(0.9, 30.0, 100.0, 0.3)
+    assert base == pytest.approx(0.9)
+    assert absolute_reward(0.9, 40.0, 100.0, 0.3) < base
+    assert absolute_reward(0.9, 20.0, 100.0, 0.3) < base  # undershoot
+    # penalized too (paper: "although the used reward also penalizes these")
+
+
+@given(st.floats(0.01, 1.0), st.floats(1.0, 100.0))
+def test_penalty_symmetric_in_ratio(c, t_ref):
+    over = absolute_reward(0.5, c * t_ref * 1.2, t_ref, c)
+    under = absolute_reward(0.5, c * t_ref * 0.8, t_ref, c)
+    assert over == pytest.approx(under, rel=1e-6)
+
+
+def test_beta_scales_penalty():
+    r1 = absolute_reward(0.5, 60.0, 100.0, 0.3, beta=-1.0)
+    r3 = absolute_reward(0.5, 60.0, 100.0, 0.3, beta=-3.0)
+    assert (0.5 - r3) == pytest.approx(3 * (0.5 - r1))
+
+
+def test_hard_exponential_only_penalizes_overshoot():
+    assert hard_exponential_reward(0.9, 20.0, 100.0, 0.3) == 0.9
+    assert hard_exponential_reward(0.9, 40.0, 100.0, 0.3) < 0.9
+
+
+def test_dispatch():
+    cfg = RewardConfig(target_ratio=0.5, beta=-2.0)
+    assert compute_reward(cfg, 1.0, 50.0, 100.0) == pytest.approx(1.0)

@@ -1,0 +1,71 @@
+"""Search-loop mechanics (short runs; learning quality is benchmarked, not
+unit-tested)."""
+import numpy as np
+import pytest
+
+from repro.core.ddpg import DDPGConfig
+from repro.core.latency import LatencyContext
+from repro.core.reward import RewardConfig
+from repro.core.search import CompressionSearch, SearchConfig
+from repro.core.state import state_dim
+
+
+def _search(tiny_lm, methods, episodes=4):
+    cm, batch = tiny_lm
+    ctx = LatencyContext(tokens=1, seq_ctx=256, mode="decode", batch=1)
+    scfg = SearchConfig(
+        methods=methods, episodes=episodes,
+        reward=RewardConfig(target_ratio=0.5),
+        ddpg=DDPGConfig(warmup_episodes=2, updates_per_episode=2,
+                        batch_size=16, buffer_size=256))
+    return CompressionSearch(cm, batch, scfg, ctx)
+
+
+@pytest.mark.parametrize("methods", ["p", "q", "pq"])
+def test_search_runs_all_agents(tiny_lm, methods):
+    search = _search(tiny_lm, methods)
+    res = search.run()
+    assert len(res.history) == 4
+    for rec in res.history:
+        assert np.isfinite(rec.reward)
+        assert 0.0 <= rec.accuracy <= 1.0
+        assert rec.latency_s > 0
+        assert len(rec.policy.cmps) == len(search.specs)
+
+
+def test_policy_cmps_legal(tiny_lm):
+    search = _search(tiny_lm, "pq")
+    rec = search.run_episode(0)
+    for s, c in zip(search.specs, rec.policy.cmps):
+        if s.prunable and s.prune_dim:
+            assert c.keep % s.prune_granularity == 0 or c.keep == s.prune_dim
+        if c.mode == "MIX":
+            assert s.mix_supported
+        if not s.quantizable:
+            assert c.mode == "FP32"
+
+
+def test_reference_ratio_one(tiny_lm):
+    search = _search(tiny_lm, "pq")
+    from repro.core.latency import policy_latency
+    lat = policy_latency(search.specs, search.ref_policy, search.hw,
+                         search.ctx)
+    assert lat.total_s == pytest.approx(search.ref_lat.total_s)
+
+
+def test_transitions_pushed(tiny_lm):
+    search = _search(tiny_lm, "pq")
+    search.run_episode(0)
+    assert len(search.replay) == len(search.steps)
+
+
+def test_state_dim_matches(tiny_lm):
+    search = _search(tiny_lm, "pq")
+    assert search.agent.cfg.state_dim == state_dim(3)
+
+
+def test_pruning_agent_skips_dependent_layers(tiny_lm):
+    search = _search(tiny_lm, "p")
+    names = [search.specs[i].name for i in search.steps]
+    assert all("down" not in n and "attn_out" not in n for n in names)
+    assert not any(n in ("embed", "head") for n in names)

@@ -1,0 +1,53 @@
+"""Sensitivity analysis (Eq. 5) tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import Policy
+from repro.core.sensitivity import (SensitivityResult, kl_divergence,
+                                    run_sensitivity)
+
+
+def test_kl_nonnegative_and_zero_on_self():
+    lp = jnp.log(jnp.asarray([[0.7, 0.2, 0.1]]))
+    assert float(kl_divergence(lp, lp)) == pytest.approx(0.0, abs=1e-7)
+    lq = jnp.log(jnp.asarray([[0.5, 0.3, 0.2]]))
+    assert float(kl_divergence(lp, lq)) > 0
+
+
+def test_run_sensitivity_structure(tiny_lm):
+    cm, batch = tiny_lm
+    sens = run_sensitivity(cm, batch)
+    assert set(sens.table.keys()) == {s.name for s in cm.specs}
+    # every quantizable layer has w/a probes, every prunable has p probes
+    for s in cm.specs:
+        row = sens.table[s.name]
+        if s.quantizable:
+            assert "w2" in row and "a2" in row
+            assert row["w2"] >= 0
+        if s.prunable and s.prune_dim:
+            assert "p50" in row and "p25" in row
+
+
+def test_lower_bits_more_sensitive(tiny_lm):
+    """On average across layers, 2-bit probes distort more than 4-bit."""
+    cm, batch = tiny_lm
+    sens = run_sensitivity(cm, batch)
+    w2 = [r["w2"] for r in sens.table.values() if "w2" in r]
+    w4 = [r["w4"] for r in sens.table.values() if "w4" in r]
+    assert np.mean(w2) > np.mean(w4)
+
+
+def test_more_pruning_more_sensitive(tiny_lm):
+    cm, batch = tiny_lm
+    sens = run_sensitivity(cm, batch)
+    p50 = [r["p50"] for r in sens.table.values() if "p50" in r]
+    p25 = [r["p25"] for r in sens.table.values() if "p25" in r]
+    assert np.mean(p25) >= np.mean(p50)
+
+
+def test_features_fixed_length(tiny_lm):
+    cm, _ = tiny_lm
+    sens = SensitivityResult({s.name: {} for s in cm.specs})
+    for s in cm.specs:
+        assert len(sens.features_for(s.name)) == 6

@@ -1,0 +1,88 @@
+"""End-to-end behaviour tests for the Galen system (paper-level claims at
+unit-test scale; the full claims are validated in benchmarks/)."""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compress import CompressibleResNet
+from repro.core.ddpg import DDPGConfig
+from repro.core.latency import LatencyContext, policy_latency
+from repro.core.policy import Policy
+from repro.core.reward import RewardConfig
+from repro.core.search import CompressionSearch, SearchConfig
+from repro.core.spec import LayerCMP
+
+
+def test_joint_policy_end_to_end(tiny_lm):
+    """Full pipeline: sensitivity -> episodes -> best policy applies and
+    evaluates; compressed latency below reference."""
+    cm, batch = tiny_lm
+    ctx = LatencyContext(tokens=1, seq_ctx=256, mode="decode", batch=1)
+    scfg = SearchConfig(methods="pq", episodes=8,
+                        reward=RewardConfig(target_ratio=0.5, beta=-3.0),
+                        ddpg=DDPGConfig(warmup_episodes=4,
+                                        updates_per_episode=4,
+                                        batch_size=16, buffer_size=512))
+    search = CompressionSearch(cm, batch, scfg, ctx)
+    res = search.run()
+    best = res.best
+    assert best is not None
+    # the found policy must actually compress (latency below reference)
+    assert best.latency_s < res.ref_latency_s
+    # and still produce a valid model
+    cs = cm.build_cspec(best.policy)
+    acc = float(cm.accuracy(batch, cs))
+    assert 0.0 <= acc <= 1.0
+
+
+def test_resnet_policy_applies(tiny_resnet):
+    """The paper's own testbed family goes through the same machinery."""
+    cm, batch = tiny_resnet
+    pol = Policy.reference(cm.specs)
+    for i, s in enumerate(cm.specs):
+        if s.prunable and s.prune_dim >= 16:
+            pol.cmps[i] = LayerCMP(keep=8, mode="INT8", w_bits=8, a_bits=8)
+    cs = cm.build_cspec(pol)
+    acc = float(cm.accuracy(batch, cs))
+    assert 0.0 <= acc <= 1.0
+    ctx = LatencyContext(tokens=1, seq_ctx=0, mode="prefill", batch=1)
+    lat_c = policy_latency(cm.specs, pol, ctx=ctx).total_s
+    lat_r = policy_latency(cm.specs, Policy.reference(cm.specs),
+                           ctx=ctx).total_s
+    assert lat_c < lat_r
+
+
+def test_macs_bops_reported(tiny_lm):
+    """Table-1 metrics (MACs / BOPs / latency / accuracy) all derivable."""
+    cm, batch = tiny_lm
+    pol = Policy([LayerCMP(keep=s.prune_dim, mode="INT8", w_bits=8,
+                           a_bits=8) for s in cm.specs])
+    macs = pol.macs_fraction(cm.specs)
+    bops = pol.bops(cm.specs)
+    assert macs == pytest.approx(1.0)
+    assert bops > 0
+
+
+def test_qat_retraining_recovers_accuracy(tiny_lm):
+    """Paper: compressed models are retrained (30 epochs). Mechanism test:
+    QAT train step with a cspec threads fake-quant and reduces loss."""
+    from repro.optim.optimizer import OptimizerConfig, adamw_init
+    from repro.train.train_step import make_train_step
+
+    cm, batch = tiny_lm
+    pol = Policy([LayerCMP(keep=s.prune_dim, mode="MIX", w_bits=3, a_bits=4)
+                  for s in cm.specs])
+    cs = cm.build_cspec(pol)
+    ocfg = OptimizerConfig(lr=3e-3, warmup_steps=2, total_steps=30,
+                           weight_decay=0.0)
+    params = cm.params
+    opt = adamw_init(params, ocfg)
+    step = jax.jit(make_train_step(cm.cfg, ocfg, cspec=cs))
+    losses = []
+    for i in range(12):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
