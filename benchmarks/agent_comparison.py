@@ -71,11 +71,16 @@ def run(cs=(0.5, 0.35), retrain: bool = True, verbose: bool = True):
     return rows
 
 
-def main(out="artifacts/bench_table1.json"):
+def main(out="artifacts/bench_table1.json",
+         engine_out="artifacts/bench_engine.json"):
     rows = run()
     os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
         json.dump(rows, f, indent=1)
+    # scalar-vs-batched episode-engine throughput (own schema/artifact)
+    from benchmarks.search_setup import engine_comparison
+    with open(engine_out, "w") as f:
+        json.dump([engine_comparison()], f, indent=1)
     return rows
 
 

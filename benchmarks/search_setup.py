@@ -1,7 +1,10 @@
-"""Search construction shared by the paper-table benchmarks."""
+"""Search construction shared by the paper-table benchmarks, plus the
+scalar-vs-batched episode-engine throughput comparison
+(``python -m benchmarks.search_setup`` prints episodes/sec for both)."""
 from __future__ import annotations
 
 import os
+import time
 
 from benchmarks.common import IMG_CTX, SERVE_CTX, get_lm_testbed, \
     get_resnet_testbed
@@ -9,7 +12,8 @@ from repro.core.compress import CompressibleLM, CompressibleResNet
 from repro.core.ddpg import DDPGConfig
 from repro.core.latency import LatencyContext
 from repro.core.reward import RewardConfig
-from repro.core.search import CompressionSearch, SearchConfig
+from repro.core.search import (BatchedCompressionSearch, CompressionSearch,
+                               SearchConfig)
 from repro.core.sensitivity import run_sensitivity
 
 FULL = os.environ.get("GALEN_BENCH_FULL", "0") == "1"
@@ -24,7 +28,8 @@ _sens_cache = {}
 
 
 def lm_search(methods: str, c: float, seed: int = 0, episodes=None,
-              sens_enabled: bool = True) -> CompressionSearch:
+              sens_enabled: bool = True, cls=CompressionSearch,
+              **cls_kw) -> CompressionSearch:
     cfg, params, val, acc = get_lm_testbed()
     # smaller eval batch: ~2x faster episodes, ±2% accuracy noise (the
     # paper also validates on a small split during search)
@@ -45,8 +50,16 @@ def lm_search(methods: str, c: float, seed: int = 0, episodes=None,
         ddpg=DDPGConfig(warmup_episodes=WARMUP, updates_per_episode=UPDATES,
                         batch_size=128, buffer_size=2000),
         seed=seed)
-    return CompressionSearch(cm, val, scfg, SERVE_CTX,
-                             sens=_sens_cache[key])
+    return cls(cm, val, scfg, SERVE_CTX, sens=_sens_cache[key], **cls_kw)
+
+
+def lm_batched_search(methods: str, c: float, seed: int = 0, episodes=None,
+                      sens_enabled: bool = True,
+                      batch_size: int = 8) -> BatchedCompressionSearch:
+    """lm_search with the batched episode engine (K episodes/rollout)."""
+    return lm_search(methods, c, seed=seed, episodes=episodes,
+                     sens_enabled=sens_enabled,
+                     cls=BatchedCompressionSearch, batch_size=batch_size)
 
 
 def resnet_search(methods: str, c: float, seed: int = 0,
@@ -64,3 +77,69 @@ def resnet_search(methods: str, c: float, seed: int = 0,
         seed=seed)
     return CompressionSearch(cm, val, scfg, IMG_CTX,
                              sens=_sens_cache["resnet"])
+
+
+# ===========================================================================
+# Episode-engine throughput: scalar loop vs batched rollout
+# ===========================================================================
+
+def _tiny_engine(batched: bool, batch_size: int, updates: int):
+    """Search on a tiny untrained LM — engine overhead dominates, which
+    is exactly what this comparison isolates."""
+    import jax
+    from repro.configs.base import ArchConfig
+    from repro.data.pipeline import bigram_lm
+    from repro.models import model as M
+
+    cfg = ArchConfig(name="tiny-engine", num_layers=3, d_model=64,
+                     num_heads=4, num_kv_heads=2, head_dim=16, d_ff=256,
+                     vocab_size=128, scan_layers=True)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    batch = bigram_lm(cfg.vocab_size, 8, 32, seed=3)
+    cm = CompressibleLM(cfg, params)
+    ctx = LatencyContext(tokens=1, seq_ctx=256, mode="decode", batch=1)
+    scfg = SearchConfig(
+        methods="pq", episodes=64, reward=RewardConfig(target_ratio=0.5),
+        ddpg=DDPGConfig(warmup_episodes=4, updates_per_episode=updates,
+                        batch_size=16, buffer_size=512))
+    if batched:
+        return BatchedCompressionSearch(cm, batch, scfg, ctx,
+                                        batch_size=batch_size)
+    return CompressionSearch(cm, batch, scfg, ctx)
+
+
+def episodes_per_sec(search, episodes: int = 32,
+                     warmup_episodes: int = 8) -> float:
+    search.run(episodes=warmup_episodes)     # warm the jit caches
+    t0 = time.perf_counter()
+    search.run(episodes=episodes)
+    return episodes / (time.perf_counter() - t0)
+
+
+def engine_comparison(batch_size: int = 8, episodes: int = 32,
+                      updates: int = 0, verbose: bool = True) -> dict:
+    """Episodes/sec, scalar vs batched, on the tiny LM.
+
+    ``updates=0`` isolates rollout+validation throughput (the part the
+    batched engine amortizes); agent updates cost the same per episode
+    on both paths and dilute the ratio.
+    """
+    scalar = episodes_per_sec(_tiny_engine(False, batch_size, updates),
+                              episodes)
+    batched = episodes_per_sec(_tiny_engine(True, batch_size, updates),
+                               episodes)
+    out = {"table": "engine", "batch_size": batch_size,
+           "episodes": episodes, "updates_per_episode": updates,
+           "scalar_eps_per_s": round(scalar, 2),
+           "batched_eps_per_s": round(batched, 2),
+           "speedup": round(batched / scalar, 2)}
+    if verbose:
+        print(f"[engine] K={batch_size} updates={updates}: "
+              f"scalar {scalar:.1f} eps/s, batched {batched:.1f} eps/s "
+              f"-> {batched / scalar:.2f}x", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    engine_comparison(updates=0)
+    engine_comparison(updates=8)

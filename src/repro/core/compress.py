@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import pruning
-from repro.core.policy import Policy
+from repro.core.policy import Policy, PolicyBatch
 from repro.core.spec import LayerCMP, LayerSpec, effective_bits
 from repro.models import blocks as B
 from repro.models import model as M
@@ -175,6 +175,36 @@ def _layer_params(params, i: int, scanned: bool):
     return blocks[i]
 
 
+def _unit_prune_scores(cfg: ArchConfig, p_l, kind: str,
+                       dense: bool = False):
+    """ℓ1 scores of one unit's prunable dim — the ONE place the
+    per-kind weight/score-function choice lives (shared by the scalar
+    cspec builder and the traced batch builder, which must prune
+    identical channels)."""
+    if kind == "attn_qkv":
+        return pruning.head_scores(p_l["attn"]["wq"]["w"], cfg.num_heads)
+    if kind == "moe_up":
+        return pruning.l1_scores(
+            [p_l["moe"]["w_up"], p_l["moe"]["w_gate"]], axis=-1)
+    if kind == "mlp_up" and dense:
+        return pruning.l1_scores(
+            [p_l["moe"]["dense_w_up"], p_l["moe"]["dense_w_gate"]],
+            axis=-1)
+    if kind == "mlp_up":
+        ws = [p_l["mlp"]["w_up"]["w"]]
+        if "w_gate" in p_l["mlp"]:
+            ws.append(p_l["mlp"]["w_gate"]["w"])
+        return pruning.l1_scores(ws)
+    if kind == "ssm_in":
+        d_inner, nheads, _ = B.ssm_dims(cfg)
+        wx = p_l["ssm"]["in_proj"][:, d_inner:2 * d_inner]
+        return pruning.head_scores(wx, nheads)
+    if kind == "rglru_in":
+        return pruning.l1_scores([p_l["rglru"]["w_x"],
+                                  p_l["rglru"]["w_y"]])
+    return None
+
+
 def build_lm_cspec(cfg: ArchConfig, params, policy: Policy,
                    specs: Sequence[LayerSpec]) -> dict:
     scanned = cfg.scan_layers and cfg.homogeneous
@@ -197,8 +227,7 @@ def build_lm_cspec(cfg: ArchConfig, params, policy: Policy,
             cq, co = cm.get("attn_qkv"), cm.get("attn_out")
             head_mask = None
             if cq is not None and cq.keep < cfg.num_heads:
-                scores = pruning.head_scores(p_l["attn"]["wq"]["w"],
-                                             cfg.num_heads)
+                scores = _unit_prune_scores(cfg, p_l, "attn_qkv")
                 head_mask = pruning.keep_mask(scores, cq.keep)
             cs["attn"] = {"qkv": _qs(cq),
                           "o": _qs(co),
@@ -207,8 +236,7 @@ def build_lm_cspec(cfg: ArchConfig, params, policy: Policy,
                 cu, cd = cm.get("moe_up"), cm.get("moe_down")
                 ff_mask = None
                 if cu is not None and cu.keep < cfg.d_ff:
-                    scores = pruning.l1_scores(
-                        [p_l["moe"]["w_up"], p_l["moe"]["w_gate"]], axis=-1)
+                    scores = _unit_prune_scores(cfg, p_l, "moe_up")
                     ff_mask = pruning.keep_mask(scores, cu.keep)
                 moe_cs = {"up": _qs(cu),
                           "down": _qs(cd),
@@ -219,9 +247,8 @@ def build_lm_cspec(cfg: ArchConfig, params, policy: Policy,
                 if cfg.moe.dense_residual:
                     dmask = None
                     if du is not None and du.keep < cfg.d_ff:
-                        scores = pruning.l1_scores(
-                            [p_l["moe"]["dense_w_up"],
-                             p_l["moe"]["dense_w_gate"]], axis=-1)
+                        scores = _unit_prune_scores(cfg, p_l, "mlp_up",
+                                                    dense=True)
                         dmask = pruning.keep_mask(scores, du.keep)
                     moe_cs["dense_up"] = _qs(du)
                     moe_cs["dense_down"] = _qs(dd)
@@ -231,21 +258,17 @@ def build_lm_cspec(cfg: ArchConfig, params, policy: Policy,
                 cu, cd = cm.get("mlp_up"), cm.get("mlp_down")
                 ff_mask = None
                 if cu is not None and cu.keep < cfg.d_ff:
-                    ws = [p_l["mlp"]["w_up"]["w"]]
-                    if "w_gate" in p_l["mlp"]:
-                        ws.append(p_l["mlp"]["w_gate"]["w"])
-                    ff_mask = pruning.keep_mask(pruning.l1_scores(ws),
-                                                cu.keep)
+                    scores = _unit_prune_scores(cfg, p_l, "mlp_up")
+                    ff_mask = pruning.keep_mask(scores, cu.keep)
                 cs["mlp"] = {"up": _qs(cu),
                              "down": _qs(cd),
                              "ff_mask": ff_mask}
         elif kind == "ssm":
             ci, co = cm.get("ssm_in"), cm.get("ssm_out")
-            d_inner, nheads, _ = B.ssm_dims(cfg)
+            nheads = B.ssm_dims(cfg)[1]
             head_mask = None
             if ci is not None and ci.keep < nheads:
-                wx = p_l["ssm"]["in_proj"][:, d_inner:2 * d_inner]
-                scores = pruning.head_scores(wx, nheads)
+                scores = _unit_prune_scores(cfg, p_l, "ssm_in")
                 head_mask = pruning.keep_mask(scores, ci.keep)
             cs["ssm"] = {"in": _qs(ci),
                          "out": _qs(co),
@@ -254,8 +277,7 @@ def build_lm_cspec(cfg: ArchConfig, params, policy: Policy,
             ci, co = cm.get("rglru_in"), cm.get("rglru_out")
             wmask = None
             if ci is not None and ci.keep < cfg.lru_width:
-                scores = pruning.l1_scores([p_l["rglru"]["w_x"],
-                                            p_l["rglru"]["w_y"]])
+                scores = _unit_prune_scores(cfg, p_l, "rglru_in")
                 wmask = pruning.keep_mask(scores, ci.keep)
             cs["rglru"] = {"in": _qs(ci),
                            "out": _qs(co),
@@ -263,10 +285,8 @@ def build_lm_cspec(cfg: ArchConfig, params, policy: Policy,
             cu, cd = cm.get("mlp_up"), cm.get("mlp_down")
             ff_mask = None
             if cu is not None and cu.keep < cfg.d_ff:
-                ws = [p_l["mlp"]["w_up"]["w"]]
-                if "w_gate" in p_l["mlp"]:
-                    ws.append(p_l["mlp"]["w_gate"]["w"])
-                ff_mask = pruning.keep_mask(pruning.l1_scores(ws), cu.keep)
+                scores = _unit_prune_scores(cfg, p_l, "mlp_up")
+                ff_mask = pruning.keep_mask(scores, cu.keep)
             cs["mlp"] = {"up": _qs(cu),
                          "down": _qs(cd),
                          "ff_mask": ff_mask}
@@ -307,11 +327,209 @@ def build_lm_cspec(cfg: ArchConfig, params, policy: Policy,
 
 
 # ===========================================================================
+# Traced cspec builders — (keep, w_bits, a_bits) arrays -> cspec pytree
+# ===========================================================================
+#
+# build_lm_cspec above runs host-side Python per policy (pytree slicing,
+# eager score/mask ops). The builders here move all of that into traced
+# jax: prune scores are policy-independent, so they are computed ONCE,
+# and the remaining work (bit scalars + rank-based masks) is a pure
+# function of the per-unit (keep, w_bits, a_bits) arrays. vmapping the
+# builder composed with accuracy gives batched policy evaluation as a
+# single jit call — the batched episode engine's validation path.
+
+def _lm_prune_scores(cfg: ArchConfig, params,
+                     specs: Sequence[LayerSpec]) -> dict:
+    """spec index -> ℓ1 scores of its prunable dim (same
+    ``_unit_prune_scores`` selection as build_lm_cspec, evaluated
+    eagerly for every prunable unit)."""
+    scanned = cfg.scan_layers and cfg.homogeneous
+    out: dict[int, jnp.ndarray] = {}
+    for idx, s in enumerate(specs):
+        if not (s.prunable and s.prune_dim):
+            continue
+        p_l = _layer_params(params, s.layer_idx, scanned)
+        sc = _unit_prune_scores(cfg, p_l, s.kind,
+                                dense=bool(s.extra.get("dense_residual")))
+        if sc is not None:
+            out[idx] = sc
+    return out
+
+
+def make_lm_cspec_builder(cfg: ArchConfig, params,
+                          specs: Sequence[LayerSpec]):
+    """Returns build(keep, w_bits, a_bits) -> cspec, fully traceable.
+
+    The produced cspec matches build_lm_cspec structurally AND
+    numerically for the same policy (masks use the same ℓ1 scores with
+    the same tie-breaking), so one jit of accuracy∘build serves every
+    policy, and vmap over the arrays batches K policies.
+    """
+    scanned = cfg.scan_layers and cfg.homogeneous
+    scores = _lm_prune_scores(cfg, params, specs)
+    pos: dict = {}
+    for idx, s in enumerate(specs):
+        if s.kind in ("embed", "head"):
+            pos[s.kind] = idx
+        else:
+            pos[(s.layer_idx, s.kind)] = idx
+
+    def build(keep, w_bits, a_bits):
+        def qs(key):
+            i = pos.get(key)
+            if i is None:
+                return {"w_bits": jnp.int32(32), "a_bits": jnp.int32(32)}
+            return {"w_bits": w_bits[i].astype(jnp.int32),
+                    "a_bits": a_bits[i].astype(jnp.int32)}
+
+        def mask(key, dim):
+            i = pos.get(key)
+            if i is None or i not in scores:
+                return jnp.ones((dim,), jnp.float32)
+            return pruning.keep_mask_dynamic(scores[i], keep[i])
+
+        layer_cspecs = []
+        for i, kind in enumerate(cfg.layer_kinds):
+            cs: dict[str, Any] = {}
+            if kind == "attn":
+                cs["attn"] = {"qkv": qs((i, "attn_qkv")),
+                              "o": qs((i, "attn_out")),
+                              "head_mask": mask((i, "attn_qkv"),
+                                                cfg.num_heads)}
+                if cfg.moe is not None:
+                    moe_cs = {"up": qs((i, "moe_up")),
+                              "down": qs((i, "moe_down")),
+                              "ff_mask": mask((i, "moe_up"), cfg.d_ff),
+                              "dense_up": None, "dense_down": None,
+                              "dense_ff_mask": None}
+                    if cfg.moe.dense_residual:
+                        moe_cs["dense_up"] = qs((i, "mlp_up"))
+                        moe_cs["dense_down"] = qs((i, "mlp_down"))
+                        moe_cs["dense_ff_mask"] = mask((i, "mlp_up"),
+                                                       cfg.d_ff)
+                    cs["moe"] = moe_cs
+                else:
+                    cs["mlp"] = {"up": qs((i, "mlp_up")),
+                                 "down": qs((i, "mlp_down")),
+                                 "ff_mask": mask((i, "mlp_up"), cfg.d_ff)}
+            elif kind == "ssm":
+                nheads = B.ssm_dims(cfg)[1]
+                cs["ssm"] = {"in": qs((i, "ssm_in")),
+                             "out": qs((i, "ssm_out")),
+                             "head_mask": mask((i, "ssm_in"), nheads)}
+            elif kind == "rglru":
+                cs["rglru"] = {"in": qs((i, "rglru_in")),
+                               "out": qs((i, "rglru_out")),
+                               "width_mask": mask((i, "rglru_in"),
+                                                  cfg.lru_width)}
+                cs["mlp"] = {"up": qs((i, "mlp_up")),
+                             "down": qs((i, "mlp_down")),
+                             "ff_mask": mask((i, "mlp_up"), cfg.d_ff)}
+            layer_cspecs.append(cs)
+        if scanned:
+            blocks_cs = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                     *layer_cspecs)
+        else:
+            blocks_cs = layer_cspecs
+        out = {"blocks": blocks_cs}
+        if "embed" in pos:
+            out["embed_bits"] = w_bits[pos["embed"]].astype(jnp.int32)
+        if "head" in pos:
+            out["head_bits"] = w_bits[pos["head"]].astype(jnp.int32)
+        return out
+
+    return build
+
+
+def make_resnet_cspec_builder(cmodel: "CompressibleResNet"):
+    """ResNet analogue of make_lm_cspec_builder."""
+    specs = cmodel.specs
+    scores: dict[int, jnp.ndarray] = {}
+    conv_i = 0
+    for idx, s in enumerate(specs):
+        if s.kind == "conv":
+            if s.prunable:
+                scores[idx] = pruning.l1_scores(
+                    [cmodel._conv_weight(conv_i)])
+            conv_i += 1
+
+    def build(keep, w_bits, a_bits):
+        cspec = []
+        for idx, s in enumerate(specs):
+            entry: dict[str, Any] = {"qs": None, "mask": None}
+            if s.quantizable:
+                entry["qs"] = {"w_bits": w_bits[idx].astype(jnp.int32),
+                               "a_bits": a_bits[idx].astype(jnp.int32)}
+            if idx in scores:
+                entry["mask"] = pruning.keep_mask_dynamic(scores[idx],
+                                                          keep[idx])
+            cspec.append(entry)
+        return cspec
+
+    return build
+
+
+# ===========================================================================
 # Model adapters (protocol used by the search / sensitivity analysis)
 # ===========================================================================
 
+def stack_cspecs(cspecs: Sequence[Any]):
+    """Stack K cspec pytrees along a new leading axis.
+
+    cspecs are policy-independent in structure (masks always
+    materialized, bits always present — see build_lm_cspec), so K of
+    them stack leaf-wise into one batch a single vmapped evaluation can
+    consume.
+    """
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *cspecs)
+
+
+class _BatchedAccuracyMixin:
+    """Batched accuracy evaluation, shared by both adapters."""
+
+    def build_cspec_batch(self, policies: Sequence[Policy]):
+        return stack_cspecs([self.build_cspec(p) for p in policies])
+
+    def accuracy_batch(self, batch: dict, stacked_cspec) -> jnp.ndarray:
+        """(K,) accuracies for K stacked cspecs — one vmap-of-jit call
+        instead of K sequential jit dispatches."""
+        return self._acc_batch_fn(batch)(stacked_cspec)
+
+    def _acc_batch_fn(self, batch: dict):
+        cached = getattr(self, "_acc_batch_cache", None)
+        if cached is not None and cached[0] is batch \
+                and cached[2] is self.params:
+            return cached[1]
+        fn = jax.jit(jax.vmap(lambda cs: self.accuracy(batch, cs)))
+        self._acc_batch_cache = (batch, fn, self.params)
+        return fn
+
+    def accuracy_policy_batch(self, batch: dict,
+                              pbatch: "PolicyBatch") -> jnp.ndarray:
+        """(K,) accuracies straight from PolicyBatch arrays.
+
+        The traced cspec builder fuses into the vmapped accuracy, so
+        the whole validation (mask building included) is ONE jit call —
+        no per-policy host-side cspec construction at all.
+        """
+        cached = getattr(self, "_acc_pb_cache", None)
+        # keyed on batch AND params identity — swapping in new weights
+        # (e.g. after a QAT retrain) must re-trace, since the compiled
+        # fn bakes params and prune scores in as constants
+        if cached is None or cached[0] is not batch \
+                or cached[2] is not self.params:
+            build = self._make_cspec_builder()
+            fn = jax.jit(jax.vmap(
+                lambda k, w, a: self.accuracy(batch, build(k, w, a))))
+            self._acc_pb_cache = (batch, fn, self.params)
+            cached = self._acc_pb_cache
+        return cached[1](jnp.asarray(pbatch.keep, jnp.int32),
+                         jnp.asarray(pbatch.w_bits, jnp.int32),
+                         jnp.asarray(pbatch.a_bits, jnp.int32))
+
+
 @dataclass
-class CompressibleLM:
+class CompressibleLM(_BatchedAccuracyMixin):
     """Adapter: ArchConfig LM + params + data -> the search interface."""
     cfg: ArchConfig
     params: Any
@@ -321,6 +539,9 @@ class CompressibleLM:
 
     def build_cspec(self, policy: Policy):
         return build_lm_cspec(self.cfg, self.params, policy, self.specs)
+
+    def _make_cspec_builder(self):
+        return make_lm_cspec_builder(self.cfg, self.params, self.specs)
 
     def logits(self, batch: dict, cspec=None):
         return M.forward(self.cfg, self.params, tokens=batch["tokens"],
@@ -337,7 +558,7 @@ class CompressibleLM:
 
 
 @dataclass
-class CompressibleResNet:
+class CompressibleResNet(_BatchedAccuracyMixin):
     cfg: R.ResNetConfig
     params: Any
 
@@ -361,6 +582,9 @@ class CompressibleResNet:
                 conv_i += 1
             cspec.append(entry)
         return cspec
+
+    def _make_cspec_builder(self):
+        return make_resnet_cspec_builder(self)
 
     def _conv_weight(self, idx: int):
         i = 0

@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.core import constraints
 from repro.core.quantization import MAX_MIX_BITS
-from repro.core.spec import LayerCMP, LayerSpec
+from repro.core.spec import LayerCMP, LayerSpec, effective_bits
 
 T_MIX = 0.5
 T_INT8 = 0.2
@@ -98,3 +98,33 @@ class Policy:
 
     def n_actions(self, methods: str) -> int:
         return {"p": 1, "q": 2, "pq": 3}[methods]
+
+
+@dataclass
+class PolicyBatch:
+    """K policies over the same LayerSpec list, as (K, L) arrays.
+
+    ``keep`` holds kept counts; ``w_bits``/``a_bits`` hold *effective*
+    bits (mode already resolved) — the form the vectorized latency
+    oracle consumes.
+    """
+    keep: np.ndarray
+    w_bits: np.ndarray
+    a_bits: np.ndarray
+
+    def __len__(self) -> int:
+        return self.keep.shape[0]
+
+
+def stack_policies(specs: Sequence[LayerSpec],
+                   policies: Sequence[Policy]) -> PolicyBatch:
+    """Pack K policies into the array form of ``PolicyBatch``."""
+    K, L = len(policies), len(specs)
+    keep = np.zeros((K, L), np.float64)
+    wb = np.zeros((K, L), np.float64)
+    ab = np.zeros((K, L), np.float64)
+    for k, p in enumerate(policies):
+        for i, c in enumerate(p.cmps):
+            keep[k, i] = c.keep
+            wb[k, i], ab[k, i] = effective_bits(c)
+    return PolicyBatch(keep=keep, w_bits=wb, a_bits=ab)

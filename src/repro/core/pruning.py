@@ -39,6 +39,22 @@ def keep_mask(scores: jnp.ndarray, keep: int) -> jnp.ndarray:
     return jnp.where(excess, 0.0, mask)
 
 
+def keep_mask_dynamic(scores: jnp.ndarray, keep) -> jnp.ndarray:
+    """``keep_mask`` with a *traced* kept count (jit/vmap-safe).
+
+    Bit-for-bit the same selection as ``keep_mask`` — threshold at the
+    keep-th largest score, then drop later-indexed ties past the count —
+    but ``keep`` may be a traced int32 scalar, so one compilation serves
+    every policy in a batch.
+    """
+    n = scores.shape[0]
+    keep = jnp.clip(keep, 0, n)
+    thresh = jnp.sort(scores)[jnp.clip(n - keep, 0, n - 1)]
+    mask = (scores >= thresh).astype(jnp.float32)
+    mask = jnp.where(jnp.cumsum(mask) > keep, 0.0, mask)
+    return jnp.where(keep > 0, mask, jnp.zeros_like(mask))
+
+
 def head_scores(wq: jnp.ndarray, num_heads: int) -> jnp.ndarray:
     """ℓ1 score per attention head from wq [d, H*hd]."""
     d, hhd = wq.shape

@@ -27,6 +27,26 @@ class ReplayBuffer:
         self.ptr = (self.ptr + 1) % self.capacity
         self.size = min(self.size + 1, self.capacity)
 
+    def push_batch(self, s, a, r, s_next, done):
+        """Bulk insert N transitions in one vectorized ring write."""
+        s = np.asarray(s, np.float32)
+        n = s.shape[0]
+        if n == 0:
+            return
+        if n >= self.capacity:
+            # degenerate oversized batch: only the tail survives anyway
+            for i in range(n):
+                self.push(s[i], a[i], r[i], s_next[i], done[i])
+            return
+        idx = (self.ptr + np.arange(n)) % self.capacity
+        self.states[idx] = s
+        self.actions[idx] = np.asarray(a, np.float32)
+        self.rewards[idx] = np.asarray(r, np.float32)
+        self.next_states[idx] = np.asarray(s_next, np.float32)
+        self.dones[idx] = np.asarray(done, np.float32)
+        self.ptr = int((self.ptr + n) % self.capacity)
+        self.size = int(min(self.size + n, self.capacity))
+
     def sample(self, batch: int):
         idx = self.rng.integers(0, self.size, size=batch)
         return (self.states[idx], self.actions[idx], self.rewards[idx],

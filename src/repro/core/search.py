@@ -3,6 +3,40 @@ prediction, hardware-oracle validation, and DDPG optimization.
 
 Three agents (paper §Proposed Agents) share this loop and differ only in
 ``methods``:  "p" (pruning), "q" (quantization), "pq" (joint).
+
+How the episode engine works
+----------------------------
+``CompressionSearch.run_episode`` is the scalar reference path: walk the
+actionable units in order, build the agent state (which probes the
+analytic latency oracle under the partial policy), act, map the
+continuous action to a legal CMP, then validate the finished policy
+(one jitted accuracy eval + one oracle call) and push the transitions
+with the shared episode reward.
+
+``BatchedCompressionSearch`` runs K episodes as one batched rollout
+with identical per-episode semantics (each episode keeps its own sigma
+from the decay schedule, its own warmup flag, and the shared-episode-
+reward transition scheme):
+
+  * states     — ``build_state_batch`` tiles the static per-unit
+                 features and reads the decided-latency share from one
+                 vectorized oracle call (``policy_latency_batch``,
+                 numpy array ops over a (K, L) policy stack) instead of
+                 K per-layer Python sweeps;
+  * actions    — ``DDPGAgent.act_batch``: one actor forward over the
+                 stacked states, row-wise truncated-normal exploration;
+  * validation — one ``jit(vmap(accuracy))`` call over K stacked
+                 cspecs and one batched oracle call, instead of K
+                 sequential jit dispatches;
+  * replay     — ``ReplayBuffer.push_batch`` bulk-inserts the K*T
+                 transitions in one ring write.
+
+Semantic differences vs the scalar loop, both at batch granularity:
+critic/actor updates for the K episodes of a batch run after the whole
+batch (same total update count) rather than interleaved between
+episodes, and the state normalizer's running stats likewise advance
+once per batch, so episodes within a batch act on the stats from the
+previous batch boundary.
 """
 from __future__ import annotations
 
@@ -16,12 +50,13 @@ import numpy as np
 
 from repro.core.ddpg import DDPGAgent, DDPGConfig
 from repro.core.latency import (V5E, HardwareTarget, LatencyContext,
-                                policy_latency)
-from repro.core.policy import Policy, map_actions
+                                policy_latency, policy_latency_batch)
+from repro.core.policy import Policy, map_actions, stack_policies
 from repro.core.replay import ReplayBuffer
 from repro.core.reward import RewardConfig, compute_reward
 from repro.core.sensitivity import SensitivityResult, run_sensitivity
-from repro.core.state import build_state, state_dim
+from repro.core.spec import effective_bits
+from repro.core.state import build_state, build_state_batch, state_dim
 
 
 @dataclass(frozen=True)
@@ -161,20 +196,135 @@ class CompressionSearch:
             bops=policy.bops(self.specs) if cfg.track_bops else 0.0,
             sigma=sigma, policy=policy)
 
+    # chunking hooks: the scalar engine advances one episode at a time;
+    # BatchedCompressionSearch overrides these to roll K per call
+    def _chunk_size(self) -> int:
+        return 1
+
+    def _run_chunk(self, first_episode: int,
+                   k: int) -> List[EpisodeRecord]:
+        return [self.run_episode(first_episode)]
+
     def run(self, episodes: Optional[int] = None,
             verbose: bool = False) -> SearchResult:
         n = episodes or self.cfg.episodes
         history: List[EpisodeRecord] = []
         best = None
-        for e in range(n):
-            rec = self.run_episode(e)
-            history.append(rec)
-            if best is None or rec.reward > best.reward:
-                best = rec
-            if verbose and (e % 10 == 0 or e == n - 1):
-                print(f"  ep {e:4d} reward={rec.reward:+.4f} "
-                      f"acc={rec.accuracy:.3f} lat_ratio={rec.latency_ratio:.3f} "
-                      f"sigma={rec.sigma:.3f}")
+        e = 0
+        while e < n:
+            k = min(self._chunk_size(), n - e)
+            for rec in self._run_chunk(e, k):
+                history.append(rec)
+                if best is None or rec.reward > best.reward:
+                    best = rec
+                if verbose and (rec.episode % 10 == 0
+                                or rec.episode == n - 1):
+                    print(f"  ep {rec.episode:4d} reward={rec.reward:+.4f} "
+                          f"acc={rec.accuracy:.3f} "
+                          f"lat_ratio={rec.latency_ratio:.3f} "
+                          f"sigma={rec.sigma:.3f}")
+            e += k
         return SearchResult(history=history, best=best,
                             ref_latency_s=self.ref_lat.total_s,
                             ref_accuracy=self.ref_acc)
+
+
+class BatchedCompressionSearch(CompressionSearch):
+    """K episodes per rollout; see the module docstring for the engine.
+
+    Per-episode semantics (sigma schedule, warmup, shared episode
+    reward, legality constraints) match ``CompressionSearch``; only the
+    dispatch is amortized, so episode throughput scales with K.
+    """
+
+    def __init__(self, cmodel, val_batch, search_cfg: SearchConfig,
+                 ctx: LatencyContext, hw: HardwareTarget = V5E,
+                 sens: Optional[SensitivityResult] = None,
+                 calib_batch=None, batch_size: int = 8):
+        super().__init__(cmodel, val_batch, search_cfg, ctx, hw=hw,
+                         sens=sens, calib_batch=calib_batch)
+        self.batch_size = max(1, batch_size)
+
+    # ------------------------------------------------------------------
+    def run_episode_batch(self, first_episode: int,
+                          k: int) -> List[EpisodeRecord]:
+        cfg = self.cfg
+        eps = list(range(first_episode, first_episode + k))
+        warmup = np.asarray(
+            [e < self.agent.cfg.warmup_episodes for e in eps])
+        sigmas = np.asarray([self.agent.sigma_at(e) for e in eps],
+                            np.float32)
+        partials = [copy.deepcopy(self.ref_policy) for _ in eps]
+        # (K, L) policy arrays, updated in place as units are decided
+        pb = stack_policies(self.specs, partials)
+        a_dim = self.agent.cfg.action_dim
+        prev_a = np.zeros((k, a_dim), np.float32)
+        step_states, step_actions = [], []
+        for t in self.steps:
+            cur = policy_latency_batch(self.specs, pb, self.hw, self.ctx,
+                                       cfg.window)
+            S = build_state_batch(self.specs, t, cur, self.sens, prev_a,
+                                  self.ref_lat)
+            A = self.agent.act_batch(S, sigmas, warmup)
+            for j in range(k):
+                cmp = map_actions(self.specs[t], A[j], cfg.methods)
+                prev = partials[j].cmps[t]
+                if cfg.methods == "q":
+                    cmp.keep = prev.keep
+                elif cfg.methods == "p":
+                    cmp.mode, cmp.w_bits, cmp.a_bits = (
+                        prev.mode, prev.w_bits, prev.a_bits)
+                partials[j].cmps[t] = cmp
+                pb.keep[j, t] = cmp.keep
+                pb.w_bits[j, t], pb.a_bits[j, t] = effective_bits(cmp)
+            step_states.append(S)
+            step_actions.append(A)
+            prev_a = A
+
+        # --- batched validation: one fused cspec+accuracy jit call and
+        # one vectorized oracle call for the whole batch
+        accs = np.asarray(
+            self.cmodel.accuracy_policy_batch(self.val_batch, pb))
+        lats = policy_latency_batch(self.specs, pb, self.hw, self.ctx,
+                                    cfg.window).total_s
+        rewards = np.asarray([
+            compute_reward(cfg.reward, float(accs[j]), float(lats[j]),
+                           self.ref_lat.total_s) for j in range(k)])
+
+        # --- transitions: (T, K, ·) -> per-episode chains, one bulk push
+        T = len(self.steps)
+        states = np.stack(step_states)            # (T, K, state_dim)
+        actions = np.stack(step_actions)          # (T, K, a_dim)
+        self.agent.observe_states(states.reshape(T * k, -1))
+        nxt = np.concatenate([states[1:], states[-1:]])
+        done = np.zeros((T, k), np.float32)
+        done[-1] = 1.0
+        order = lambda x: x.swapaxes(0, 1).reshape(T * k, *x.shape[2:])
+        self.replay.push_batch(
+            order(states), order(actions),
+            np.repeat(rewards, T).astype(np.float32),
+            order(nxt), order(done))
+        n_live = int((~warmup).sum())
+        for _ in range(self.agent.cfg.updates_per_episode * n_live):
+            self.agent.update(self.replay)
+
+        records = []
+        for j, e in enumerate(eps):
+            pol = partials[j]
+            ratio = float(lats[j]) / (cfg.reward.target_ratio *
+                                      self.ref_lat.total_s)
+            records.append(EpisodeRecord(
+                episode=e, reward=float(rewards[j]),
+                accuracy=float(accs[j]), latency_s=float(lats[j]),
+                latency_ratio=ratio,
+                macs_frac=pol.macs_fraction(self.specs),
+                bops=pol.bops(self.specs) if cfg.track_bops else 0.0,
+                sigma=float(sigmas[j]), policy=pol))
+        return records
+
+    def _chunk_size(self) -> int:
+        return self.batch_size
+
+    def _run_chunk(self, first_episode: int,
+                   k: int) -> List[EpisodeRecord]:
+        return self.run_episode_batch(first_episode, k)

@@ -7,7 +7,7 @@ features, computed against the hardware latency oracle instead of FLOPs).
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import Sequence
 
 import numpy as np
 
@@ -30,36 +30,76 @@ def build_state(specs: Sequence[LayerSpec], t: int, partial: Policy,
                 sens: SensitivityResult, prev_action: np.ndarray,
                 hw: HardwareTarget, ctx: LatencyContext,
                 ref_lat: PolicyLatency, window: int = 0) -> np.ndarray:
+    static, this_share, rest_share, ref_total = _static_features(
+        specs, t, sens, ref_lat)
+    cur = policy_latency(specs, partial, hw, ctx, window)
+    # latency of units decided so far (indices < t) under partial policy
+    # vs what remains at reference cost; policy_latency may interleave
+    # attention-extra entries, so map each unit back by name
+    decided = sum(u.time_s for u in cur.units
+                  if _unit_index(u.name, specs) < t)
+    tail = np.asarray([this_share, decided / ref_total, rest_share],
+                      np.float32)
+    return np.concatenate([static,
+                           np.asarray(prev_action, np.float32).ravel(),
+                           tail])
+
+
+def build_state_batch(specs: Sequence[LayerSpec], t: int, cur_lat,
+                      sens: SensitivityResult, prev_actions: np.ndarray,
+                      ref_lat: PolicyLatency) -> np.ndarray:
+    """Batched ``build_state``: one (K, state_dim) array for K episodes.
+
+    ``cur_lat`` is a ``BatchedPolicyLatency`` for the K partial policies
+    (the caller already evaluates the vectorized oracle each step, so
+    the per-step scalar oracle sweep is not repeated here). All features
+    except ``prev_action`` and the decided-latency share are identical
+    across the batch and cached per (specs, sens, ref_lat, t).
+    """
+    static, this_share, rest_share, ref_total = _static_features(
+        specs, t, sens, ref_lat)
+    prev_actions = np.atleast_2d(np.asarray(prev_actions, np.float32))
+    K = prev_actions.shape[0]
+    decided = (cur_lat.decided_before(t) / ref_total).astype(np.float32)
+    tail = np.column_stack([
+        np.full(K, this_share, np.float32), decided,
+        np.full(K, rest_share, np.float32)])
+    return np.concatenate([np.tile(static, (K, 1)), prev_actions, tail],
+                          axis=1)
+
+
+_static_cache: dict = {}
+_STATIC_CACHE_MAX = 4096               # ~entries for dozens of searches
+
+
+def _static_features(specs, t, sens, ref_lat):
+    key = (id(specs), id(sens), id(ref_lat), t)
+    hit = _static_cache.get(key)
+    if hit is not None and hit[0] is specs and hit[1] is sens \
+            and hit[2] is ref_lat:
+        return hit[3]
+    if len(_static_cache) >= _STATIC_CACHE_MAX:
+        _static_cache.clear()
     s = specs[t]
     total_flops = sum(x.flops_per_token for x in specs) or 1.0
     total_weights = sum(x.weight_elems for x in specs) or 1.0
-
-    kind_onehot = [1.0 if s.kind == k else 0.0 for k in KINDS]
-
-    cur = policy_latency(specs, partial, hw, ctx, window)
-    ref_total = ref_lat.total_s or 1.0
-    # latency of units decided so far (indices < t) under partial policy
-    # vs what remains at reference cost
-    per_unit = [u.time_s for u in cur.units]
-    # policy_latency may interleave attention-extra entries; map by name
-    decided = sum(u.time_s for u in cur.units
-                  if _unit_index(u.name, specs) < t)
-    rest_ref = sum(u.time_s for u in ref_lat.units
-                   if _unit_index(u.name, specs) >= t)
-    this_share = sum(u.time_s for u in ref_lat.units
-                     if _unit_index(u.name, specs) == t) / ref_total
-
-    feats: List[float] = [t / max(1, len(specs))]
-    feats += kind_onehot
+    feats = [t / max(1, len(specs))]
+    feats += [1.0 if s.kind == k else 0.0 for k in KINDS]
     feats += [np.log1p(s.in_dim) / 12.0, np.log1p(s.out_dim) / 12.0,
               np.log1p(s.prune_dim) / 12.0]
     feats += [s.flops_per_token / total_flops,
               s.weight_elems / total_weights]
     feats += [1.0 if s.prunable else 0.0, 1.0 if s.mix_supported else 0.0]
     feats += sens.features_for(s.name)
-    feats += list(np.asarray(prev_action, np.float32))
-    feats += [this_share, decided / ref_total, rest_ref / ref_total]
-    return np.asarray(feats, np.float32)
+    static = np.asarray(feats, np.float32)
+    ref_total = ref_lat.total_s or 1.0
+    this_share = sum(u.time_s for u in ref_lat.units
+                     if _unit_index(u.name, specs) == t) / ref_total
+    rest_share = sum(u.time_s for u in ref_lat.units
+                     if _unit_index(u.name, specs) >= t) / ref_total
+    val = (static, this_share, rest_share, ref_total)
+    _static_cache[key] = (specs, sens, ref_lat, val)
+    return val
 
 
 _name_cache: dict = {}
@@ -67,9 +107,11 @@ _name_cache: dict = {}
 
 def _unit_index(unit_name: str, specs: Sequence[LayerSpec]) -> int:
     key = id(specs)
-    table = _name_cache.get(key)
-    if table is None:
-        table = {s.name: i for i, s in enumerate(specs)}
-        _name_cache[key] = table
+    hit = _name_cache.get(key)
+    # identity-guard + strong ref, so a recycled list id cannot serve a
+    # stale table (same idiom as _static_cache / the oracle cache)
+    if hit is None or hit[0] is not specs:
+        hit = (specs, {s.name: i for i, s in enumerate(specs)})
+        _name_cache[key] = hit
     base = unit_name[:-5] if unit_name.endswith(".attn") else unit_name
-    return table.get(base, len(specs))
+    return hit[1].get(base, len(specs))

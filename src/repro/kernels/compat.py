@@ -1,0 +1,13 @@
+"""jax version compatibility for the Pallas TPU kernels.
+
+``pltpu.TPUCompilerParams`` (jax <= 0.4.x) was renamed to
+``pltpu.CompilerParams`` in newer releases; the kwargs we use
+(``dimension_semantics``) are identical in both. Resolve whichever the
+installed jax provides so the kernels import everywhere.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -1,0 +1,141 @@
+"""Seeded-random fallback for ``hypothesis`` when it is not installed.
+
+Provides API-compatible shims for the subset this suite uses:
+
+  * ``given(*strategies)`` — draws ``max_examples`` samples per test
+    from a deterministic per-test RNG (seeded by the test's qualified
+    name, so failures reproduce) and calls the test once per sample.
+  * ``settings(max_examples=..., deadline=...)`` — records
+    ``max_examples``; other knobs are accepted and ignored.
+  * ``strategies`` (``st``) — ``floats``, ``integers``, ``booleans``,
+    ``sampled_from``; each supports ``.map(f)``.
+  * ``hnp`` — ``arrays`` / ``array_shapes`` from
+    ``hypothesis.extra.numpy``.
+
+No shrinking, no database — just uniform sampling with occasional
+endpoint probes (real hypothesis is used automatically when present;
+see the try/except imports in the test modules).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+DEFAULT_EXAMPLES = 25
+_ENDPOINT_PROB = 0.1
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def map(self, f):
+        return Strategy(lambda rng: f(self._draw(rng)))
+
+
+class strategies:
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, width=64, **_):
+        lo, hi = float(min_value), float(max_value)
+
+        def draw(rng):
+            if rng.random() < _ENDPOINT_PROB:
+                x = lo if rng.random() < 0.5 else hi
+            else:
+                x = lo + (hi - lo) * rng.random()
+            return float(np.float32(x)) if width == 32 else x
+
+        return Strategy(draw)
+
+    @staticmethod
+    def integers(min_value=0, max_value=100, **_):
+        lo, hi = int(min_value), int(max_value)
+
+        def draw(rng):
+            if rng.random() < _ENDPOINT_PROB:
+                return lo if rng.random() < 0.5 else hi
+            return int(rng.integers(lo, hi + 1))
+
+        return Strategy(draw)
+
+    @staticmethod
+    def booleans():
+        return Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def sampled_from(items):
+        seq = list(items)
+        return Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+st = strategies
+
+
+class hnp:
+    """Shim for ``hypothesis.extra.numpy``."""
+
+    @staticmethod
+    def array_shapes(min_dims=1, max_dims=3, min_side=1, max_side=10):
+        def draw(rng):
+            nd = int(rng.integers(min_dims, max_dims + 1))
+            return tuple(int(rng.integers(min_side, max_side + 1))
+                         for _ in range(nd))
+
+        return Strategy(draw)
+
+    @staticmethod
+    def arrays(dtype, shape, elements=None):
+        def draw(rng):
+            shp = shape.example(rng) if isinstance(shape, Strategy) \
+                else tuple(shape)
+            n = int(np.prod(shp)) if shp else 1
+            if elements is not None:
+                flat = [elements.example(rng) for _ in range(n)]
+                return np.asarray(flat, dtype).reshape(shp)
+            return rng.random(shp).astype(dtype)
+
+        return Strategy(draw)
+
+
+def settings(max_examples=None, deadline=None, **_):
+    """Records max_examples on the decorated function (either side of
+    ``given`` — attributes are looked up at call time)."""
+
+    def deco(fn):
+        fn._propcheck_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = (getattr(wrapper, "_propcheck_max_examples", None)
+                 or getattr(fn, "_propcheck_max_examples", None)
+                 or DEFAULT_EXAMPLES)
+            seed = zlib.crc32(
+                f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                vals = [s.example(rng) for s in strats]
+                fn(*args, *vals, **kwargs)
+
+        # pytest must not mistake the strategy-filled parameters for
+        # fixtures: expose a signature without the rightmost len(strats)
+        # params (hypothesis fills positional strategies from the right)
+        params = list(inspect.signature(fn).parameters.values())
+        keep = params[:len(params) - len(strats)]
+        wrapper.__signature__ = inspect.Signature(keep)
+        del wrapper.__dict__["__wrapped__"]
+        wrapper.hypothesis_shim = True
+        return wrapper
+
+    return deco

@@ -1,8 +1,12 @@
 """Property tests for the continuous->discrete policy mapping (Eq. 4/8)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # seeded-random fallback shim
+    from _propcheck import given, settings, st
 
 from repro.core import constraints
 from repro.core.policy import (T_INT8, T_MIX, Policy, d_inverse, map_actions,

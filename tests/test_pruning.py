@@ -2,10 +2,15 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
-from repro.core.pruning import head_scores, keep_mask, l1_scores, slice_indices
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # seeded-random fallback shim
+    from _propcheck import given, settings, st
+
+from repro.core.pruning import (head_scores, keep_mask, keep_mask_dynamic,
+                                l1_scores, slice_indices)
 
 
 @given(st.integers(1, 64), st.integers(0, 64))
@@ -15,6 +20,25 @@ def test_keep_mask_count(n, keep):
     m = keep_mask(scores, keep)
     assert int(jnp.sum(m)) == min(keep, n)
     assert set(np.unique(np.asarray(m))) <= {0.0, 1.0}
+
+
+@given(st.integers(1, 32), st.integers(0, 40), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_keep_mask_dynamic_matches_static(n, keep, seed):
+    """Traced variant selects exactly keep_mask's channels — including
+    on tied scores (quantized score draw forces frequent ties)."""
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(np.round(rng.random(n) * 4) / 4)
+    static = keep_mask(scores, keep)
+    dynamic = keep_mask_dynamic(scores, jnp.int32(keep))
+    np.testing.assert_array_equal(np.asarray(static), np.asarray(dynamic))
+
+
+def test_keep_mask_dynamic_traced():
+    scores = jnp.asarray([0.1, 5.0, 0.2, 3.0, 0.05])
+    out = jax.jit(keep_mask_dynamic)(scores, jnp.int32(2))
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(keep_mask(scores, 2)))
 
 
 def test_keep_mask_selects_largest():

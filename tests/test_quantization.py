@@ -3,9 +3,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
-from hypothesis.extra import numpy as hnp
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    from hypothesis.extra import numpy as hnp
+except ImportError:                      # seeded-random fallback shim
+    from _propcheck import given, settings, st, hnp
 
 from repro.core.quantization import fake_quant, fake_quant_weight, quantize
 

@@ -1,7 +1,11 @@
 """Reward function tests (paper Eq. 6)."""
 import pytest
-from hypothesis import given
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given
+    from hypothesis import strategies as st
+except ImportError:                      # seeded-random fallback shim
+    from _propcheck import given, st
 
 from repro.core.reward import (RewardConfig, absolute_reward, compute_reward,
                                hard_exponential_reward)
