@@ -1,8 +1,13 @@
 """Search construction shared by the paper-table benchmarks, plus the
-scalar-vs-batched episode-engine throughput comparison
-(``python -m benchmarks.search_setup`` prints episodes/sec for both)."""
+episode-engine throughput comparisons: scalar vs batched rollouts, and
+independent vs population-shared (vmapped) agent updates.
+
+``python -m benchmarks.search_setup`` prints episodes/sec for all of
+them and writes the rows to ``artifacts/bench_engine.json`` (uploaded
+weekly by CI so update-path regressions are visible)."""
 from __future__ import annotations
 
+import json
 import os
 import time
 
@@ -13,7 +18,7 @@ from repro.core.ddpg import DDPGConfig
 from repro.core.latency import LatencyContext
 from repro.core.reward import RewardConfig
 from repro.core.search import (BatchedCompressionSearch, CompressionSearch,
-                               SearchConfig)
+                               PopulationSearch, SearchConfig)
 from repro.core.sensitivity import run_sensitivity
 
 FULL = os.environ.get("GALEN_BENCH_FULL", "0") == "1"
@@ -29,7 +34,9 @@ _sens_cache = {}
 
 def lm_search(methods: str, c: float, seed: int = 0, episodes=None,
               sens_enabled: bool = True, cls=CompressionSearch,
-              **cls_kw) -> CompressionSearch:
+              action_dim: int = 0, **cls_kw) -> CompressionSearch:
+    """``action_dim`` > the method's native count pads the agent's
+    action space (required for mixed-method PopulationSearch members)."""
     cfg, params, val, acc = get_lm_testbed()
     # smaller eval batch: ~2x faster episodes, ±2% accuracy noise (the
     # paper also validates on a small split during search)
@@ -48,7 +55,8 @@ def lm_search(methods: str, c: float, seed: int = 0, episodes=None,
         episodes=episodes or EPISODES[methods],
         reward=RewardConfig(target_ratio=c, beta=-3.0),
         ddpg=DDPGConfig(warmup_episodes=WARMUP, updates_per_episode=UPDATES,
-                        batch_size=128, buffer_size=2000),
+                        batch_size=128, buffer_size=2000,
+                        action_dim=action_dim or 1),
         seed=seed)
     return cls(cm, val, scfg, SERVE_CTX, sens=_sens_cache[key], **cls_kw)
 
@@ -83,25 +91,37 @@ def resnet_search(methods: str, c: float, seed: int = 0,
 # Episode-engine throughput: scalar loop vs batched rollout
 # ===========================================================================
 
-def _tiny_engine(batched: bool, batch_size: int, updates: int):
-    """Search on a tiny untrained LM — engine overhead dominates, which
-    is exactly what this comparison isolates."""
-    import jax
-    from repro.configs.base import ArchConfig
-    from repro.data.pipeline import bigram_lm
-    from repro.models import model as M
+_tiny_testbed_cache = {}
 
-    cfg = ArchConfig(name="tiny-engine", num_layers=3, d_model=64,
-                     num_heads=4, num_kv_heads=2, head_dim=16, d_ff=256,
-                     vocab_size=128, scan_layers=True)
-    params = M.init(cfg, jax.random.PRNGKey(0))
-    batch = bigram_lm(cfg.vocab_size, 8, 32, seed=3)
-    cm = CompressibleLM(cfg, params)
+
+def _tiny_testbed():
+    """Tiny untrained LM + shared sensitivity — engine overhead
+    dominates its episodes, which is what these comparisons isolate."""
+    if "lm" not in _tiny_testbed_cache:
+        import jax
+        from repro.configs.base import ArchConfig
+        from repro.data.pipeline import bigram_lm
+        from repro.models import model as M
+
+        cfg = ArchConfig(name="tiny-engine", num_layers=3, d_model=64,
+                         num_heads=4, num_kv_heads=2, head_dim=16, d_ff=256,
+                         vocab_size=128, scan_layers=True)
+        params = M.init(cfg, jax.random.PRNGKey(0))
+        batch = bigram_lm(cfg.vocab_size, 8, 32, seed=3)
+        _tiny_testbed_cache["lm"] = (CompressibleLM(cfg, params), batch)
+    return _tiny_testbed_cache["lm"]
+
+
+def _tiny_engine(batched: bool, batch_size: int, updates: int,
+                 methods: str = "pq", action_dim: int = 0, seed: int = 0):
+    cm, batch = _tiny_testbed()
     ctx = LatencyContext(tokens=1, seq_ctx=256, mode="decode", batch=1)
     scfg = SearchConfig(
-        methods="pq", episodes=64, reward=RewardConfig(target_ratio=0.5),
+        methods=methods, episodes=64, reward=RewardConfig(target_ratio=0.5),
         ddpg=DDPGConfig(warmup_episodes=4, updates_per_episode=updates,
-                        batch_size=16, buffer_size=512))
+                        batch_size=16, buffer_size=512,
+                        action_dim=action_dim or 1),
+        seed=seed)
     if batched:
         return BatchedCompressionSearch(cm, batch, scfg, ctx,
                                         batch_size=batch_size)
@@ -109,20 +129,34 @@ def _tiny_engine(batched: bool, batch_size: int, updates: int):
 
 
 def episodes_per_sec(search, episodes: int = 32,
-                     warmup_episodes: int = 8) -> float:
-    search.run(episodes=warmup_episodes)     # warm the jit caches
-    t0 = time.perf_counter()
-    search.run(episodes=episodes)
-    return episodes / (time.perf_counter() - t0)
+                     warmup_episodes: int = 16, repeats: int = 3) -> float:
+    # warm the jit caches over TWO chunks: the first chunk straddles the
+    # agent's warmup boundary, so its fused update chunk is shorter than
+    # the steady-state one — both scan lengths must compile here, not in
+    # the timed region
+    search.run(episodes=warmup_episodes)
+    # best-of-N: shared CI/dev boxes show ±20% run-to-run contention
+    # noise, and the minimum is the stable estimate of engine cost
+    import jax
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        search.run(episodes=episodes)
+        # the final fused update chunk is dispatched asynchronously —
+        # fence it so the timed region contains all of its work
+        jax.block_until_ready(search.agent.state)
+        best = min(best, time.perf_counter() - t0)
+    return episodes / best
 
 
 def engine_comparison(batch_size: int = 8, episodes: int = 32,
                       updates: int = 0, verbose: bool = True) -> dict:
     """Episodes/sec, scalar vs batched, on the tiny LM.
 
-    ``updates=0`` isolates rollout+validation throughput (the part the
-    batched engine amortizes); agent updates cost the same per episode
-    on both paths and dilute the ratio.
+    ``updates=0`` isolates rollout+validation throughput; with updates
+    enabled both engines dispatch each episode batch's updates as one
+    fused ``update_chunk`` scan (PR 2), so the batched engine amortizes
+    rollout AND learning dispatch.
     """
     scalar = episodes_per_sec(_tiny_engine(False, batch_size, updates),
                               episodes)
@@ -140,6 +174,75 @@ def engine_comparison(batch_size: int = 8, episodes: int = 32,
     return out
 
 
+def population_comparison(batch_size: int = 8, episodes: int = 32,
+                          updates: int = 8, verbose: bool = True) -> dict:
+    """Aggregate episodes/sec for the paper's p/q/pq agent trio:
+    three independent batched searches vs one PopulationSearch whose
+    members share each update dispatch via ``jit(vmap(update_chunk))``.
+
+    Action dims are padded to the joint agent's 3 in both arms so the
+    comparison isolates dispatch sharing, not network sizes.
+    """
+    methods = ("p", "q", "pq")
+    warm, total = 16, episodes * len(methods)   # 2 chunks: see above
+
+    def fresh(seed0):
+        return [_tiny_engine(True, batch_size, updates, methods=m,
+                             action_dim=3, seed=seed0 + i)
+                for i, m in enumerate(methods)]
+
+    import jax
+
+    def fence(ms):      # async update chunks must land inside the timer
+        for m in ms:
+            jax.block_until_ready(m.agent.state)
+
+    # --- independent: each member flushes its own fused update chunks
+    members = fresh(0)
+    for m in members:
+        m.run(episodes=warm)             # warm the jit caches
+    indep = 0.0
+    for _ in range(3):                   # best-of-N (see episodes_per_sec)
+        t0 = time.perf_counter()
+        for m in members:
+            m.run(episodes=episodes)
+        fence(members)
+        indep = max(indep, total / (time.perf_counter() - t0))
+
+    # --- population: one vmapped update dispatch for all members
+    pop = PopulationSearch(fresh(100))
+    pop.run(episodes=warm)
+    shared = 0.0
+    for _ in range(3):
+        t0 = time.perf_counter()
+        pop.run(episodes=episodes)
+        fence(pop.members)
+        shared = max(shared, total / (time.perf_counter() - t0))
+
+    out = {"table": "population", "members": list(methods),
+           "batch_size": batch_size, "episodes_per_member": episodes,
+           "updates_per_episode": updates,
+           "independent_eps_per_s": round(indep, 2),
+           "population_eps_per_s": round(shared, 2),
+           "speedup": round(shared / indep, 2)}
+    if verbose:
+        print(f"[population] P={len(methods)} K={batch_size} "
+              f"updates={updates}: independent {indep:.1f} eps/s, "
+              f"shared-dispatch {shared:.1f} eps/s "
+              f"-> {shared / indep:.2f}x", flush=True)
+    return out
+
+
+def main(out: str = "artifacts/bench_engine.json"):
+    rows = [engine_comparison(updates=0),
+            engine_comparison(updates=8),
+            population_comparison()]
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {out}", flush=True)
+    return rows
+
+
 if __name__ == "__main__":
-    engine_comparison(updates=0)
-    engine_comparison(updates=8)
+    main()

@@ -5,16 +5,47 @@ bounded actions in [0,1]; Adam lr 1e-4 (actor) / 1e-3 (critic),
 β1=0.9 β2=0.999; γ=0.99; batch 128; replay 2000; exploration via truncated
 normal σ0=0.5, decay 0.95/episode; rewards in each sampled batch normalized
 with a moving average; states standardized with running mean/var estimates.
+
+Layout
+------
+The agent is a *functional* subsystem: all learnable/learning state lives
+in an ``AgentState`` pytree (actor/critic/targets/Adam moments/running-norm
+stats/reward moving average/PRNG key) manipulated by pure functions:
+
+  * ``agent_init(cfg, key)``                 — build a fresh state;
+  * ``agent_act(cfg, st, s, key, sigma)``    — pure jax acting (truncated-
+    normal exploration), the traceable twin of the host rollout path;
+  * ``update_step(cfg, st, batch)``          — one critic/actor/target
+    update on an explicit batch, including the per-step reward-moving-
+    average advance and state standardization (normalizer stats are
+    *frozen* inside the step — they only move at rollout boundaries);
+  * ``update_chunk(cfg, st, replay, n)``     — ``lax.scan`` of n update
+    steps with in-scan uniform replay sampling: one jitted dispatch, one
+    host sync for the losses, instead of n sample+dispatch round-trips;
+  * ``population_update_chunk(cfg, sts, replays, n)`` — ``jit(vmap)`` of
+    the chunk over a stacked population of P agent states + buffers, so
+    p/q/pq agents (or one agent per hardware target) share every update
+    dispatch.
+
+``DDPGAgent`` remains as a thin compatibility shim over ``AgentState``:
+``act``/``act_batch`` keep the fast host-numpy rollout forward,
+``update(replay)`` keeps the original host-sampled scalar semantics, and
+``update_chunk(replay, n)`` dispatches the fused scan. Host-authoritative
+pieces (running norm, reward-MA between dispatches, numpy rollout RNG)
+are synced into the pytree right before each fused dispatch.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Tuple
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.replay import DeviceReplayData, device_replay_sample
 
 
 @dataclass(frozen=True)
@@ -78,7 +109,8 @@ def critic_forward(params, state, action):
 
 def adam_init(params):
     z = jax.tree.map(jnp.zeros_like, params)
-    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
 
 
 def adam_step(params, grads, st, lr, b1=0.9, b2=0.999, eps=1e-8):
@@ -121,27 +153,282 @@ class RunningNorm:
         return (x - self.mean) / np.sqrt(self.var + 1e-8)
 
 
+# ===========================================================================
+# Functional core
+# ===========================================================================
+
+class AgentState(NamedTuple):
+    """Everything one DDPG agent learns or consumes while learning.
+
+    A pure pytree: scans carry it, ``vmap`` stacks P of them into a
+    population, and the host shim treats it as the single source of
+    truth for parameters between dispatches.
+    """
+    actor: list
+    critic: list
+    target_actor: list
+    target_critic: list
+    opt_a: dict
+    opt_c: dict
+    norm_count: jnp.ndarray     # () f32   running-norm sample count
+    norm_mean: jnp.ndarray      # (state_dim,) f32
+    norm_var: jnp.ndarray       # (state_dim,) f32
+    reward_ma: jnp.ndarray      # () f32   moving-average reward
+    reward_ma_init: jnp.ndarray  # () f32  0 = uninitialized
+    key: jnp.ndarray            # PRNG key (drives in-scan sampling)
+
+
+def agent_init(cfg: DDPGConfig, key) -> AgentState:
+    k1, k2, key = jax.random.split(key, 3)
+    dims_a = (cfg.state_dim,) + cfg.hidden + (cfg.action_dim,)
+    dims_c = (cfg.state_dim + cfg.action_dim,) + cfg.hidden + (1,)
+    actor = _mlp_init(k1, dims_a)
+    critic = _mlp_init(k2, dims_c)
+    return AgentState(
+        actor=actor, critic=critic,
+        target_actor=jax.tree.map(jnp.copy, actor),
+        target_critic=jax.tree.map(jnp.copy, critic),
+        opt_a=adam_init(actor), opt_c=adam_init(critic),
+        norm_count=jnp.asarray(1e-4, jnp.float32),
+        norm_mean=jnp.zeros((cfg.state_dim,), jnp.float32),
+        norm_var=jnp.ones((cfg.state_dim,), jnp.float32),
+        reward_ma=jnp.zeros((), jnp.float32),
+        reward_ma_init=jnp.zeros((), jnp.float32),
+        key=key)
+
+
+def agent_act(cfg: DDPGConfig, st: AgentState, s, key, sigma):
+    """Pure acting: standardized state -> actor -> truncated normal.
+
+    Mirrors the host rejection sampler: 16 candidate draws, first
+    in-bounds one wins, else the first draw clipped to [0, 1].
+    """
+    s = (s - st.norm_mean) / jnp.sqrt(st.norm_var + 1e-8)
+    mu = actor_forward(st.actor, s)
+    cand = mu + sigma * jax.random.normal(key, (16,) + mu.shape, jnp.float32)
+    ok = jnp.all((cand >= 0.0) & (cand <= 1.0), axis=-1)
+    first = jnp.argmax(ok)
+    noisy = jnp.where(jnp.any(ok), cand[first], jnp.clip(cand[0], 0.0, 1.0))
+    return jnp.where(sigma > 0.0, noisy, mu)
+
+
+def ddpg_step(cfg: DDPGConfig, actor, critic, t_actor, t_critic,
+              opt_a, opt_c, batch):
+    """One critic + actor + soft-target update on a prepared batch
+    (states already standardized, rewards already centered)."""
+    s, a, r, s2, done = batch
+
+    def critic_loss(cp):
+        a2 = actor_forward(t_actor, s2)
+        q_target = r + cfg.gamma * (1.0 - done) * critic_forward(
+            t_critic, s2, a2)
+        q = critic_forward(cp, s, a)
+        return jnp.mean((q - jax.lax.stop_gradient(q_target)) ** 2)
+
+    lc, gc = jax.value_and_grad(critic_loss)(critic)
+    critic, opt_c = adam_step(critic, gc, opt_c, cfg.critic_lr)
+
+    def actor_loss(ap):
+        return -jnp.mean(critic_forward(critic, s, actor_forward(ap, s)))
+
+    la, ga = jax.value_and_grad(actor_loss)(actor)
+    actor, opt_a = adam_step(actor, ga, opt_a, cfg.actor_lr)
+
+    t_actor = jax.tree.map(
+        lambda t, p: (1 - cfg.tau) * t + cfg.tau * p, t_actor, actor)
+    t_critic = jax.tree.map(
+        lambda t, p: (1 - cfg.tau) * t + cfg.tau * p, t_critic, critic)
+    return actor, critic, t_actor, t_critic, opt_a, opt_c, lc, la
+
+
+def update_step(cfg: DDPGConfig, st: AgentState, batch):
+    """One full scalar-semantics update on an explicit sampled batch:
+    reward-MA advance -> reward centering -> state standardization with
+    the snapshot norm stats -> ``ddpg_step``."""
+    s, a, r, s2, done = batch
+    batch_mean = jnp.mean(r)
+    d = cfg.reward_ma_decay
+    ma = jnp.where(st.reward_ma_init > 0.0,
+                   d * st.reward_ma + (1.0 - d) * batch_mean, batch_mean)
+    r = r - ma
+    inv = 1.0 / jnp.sqrt(st.norm_var + 1e-8)
+    s = (s - st.norm_mean) * inv
+    s2 = (s2 - st.norm_mean) * inv
+    actor, critic, t_actor, t_critic, opt_a, opt_c, lc, la = ddpg_step(
+        cfg, st.actor, st.critic, st.target_actor, st.target_critic,
+        st.opt_a, st.opt_c, (s, a, r, s2, done))
+    st = st._replace(actor=actor, critic=critic, target_actor=t_actor,
+                     target_critic=t_critic, opt_a=opt_a, opt_c=opt_c,
+                     reward_ma=ma.astype(jnp.float32),
+                     reward_ma_init=jnp.ones((), jnp.float32))
+    return st, (lc, la)
+
+
+def chunk_sample_keys(key, n: int):
+    """The per-step sampling keys a chunk of n updates will consume,
+    plus the advanced carry key. Exposed so parity tests can replay the
+    exact batches a chunk draws."""
+    carry, samp = jax.random.split(key)
+    return carry, jax.random.split(samp, n)
+
+
+# scan unroll for update chunks: 2 fuses adjacent steps enough to cut
+# per-iteration overhead ~30% on CPU without the compile-time blowup of
+# higher factors (measured: 6.6 -> 4.6 ms/update at 2, 4.3 at 8)
+_SCAN_UNROLL = 2
+
+
+def update_chunk(cfg: DDPGConfig, st: AgentState,
+                 replay: DeviceReplayData, n: int):
+    """n critic/actor/target updates as one ``lax.scan``: per-step
+    uniform replay sampling, reward-MA advance, and parameter updates
+    all stay on device; callers sync once for the (n,) loss arrays.
+
+    The per-step in-scan gather fuses into the update step — measured
+    faster than hoisting all n batch gathers out of the scan."""
+    carry_key, keys = chunk_sample_keys(st.key, n)
+    st = st._replace(key=carry_key)
+
+    def step(carry, k):
+        batch = device_replay_sample(replay, k, cfg.batch_size)
+        return update_step(cfg, carry, batch)
+
+    return jax.lax.scan(step, st, keys, unroll=min(_SCAN_UNROLL, n))
+
+
+@partial(jax.jit, static_argnums=(0, 3))
+def _update_chunk_jit(cfg, st, replay, n):
+    return update_chunk(cfg, st, replay, n)
+
+
+@partial(jax.jit, static_argnums=(0, 3))
+def _population_update_chunk_jit(cfg, sts, replays, n):
+    return jax.vmap(lambda s, r: update_chunk(cfg, s, r, n))(sts, replays)
+
+
+def population_update_chunk(cfg: DDPGConfig, states: AgentState,
+                            replays: DeviceReplayData, n: int):
+    """``jit(vmap(update_chunk))`` over P stacked agent states and
+    buffers: the whole population's ``n × P`` updates are one dispatch.
+
+    ``states``/``replays`` are pytrees whose leaves carry a leading
+    population axis (see ``tree_stack``)."""
+    return _population_update_chunk_jit(cfg, states, replays, n)
+
+
+def tree_stack(trees):
+    """Stack a list of identically-shaped pytrees along a new axis 0."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tree_index(tree, i: int):
+    """Slice member i out of a stacked pytree."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+# ===========================================================================
+# Compatibility shim
+# ===========================================================================
+
 class DDPGAgent:
-    """One agent = actor + critic (+ targets) + optimizers + exploration."""
+    """Thin stateful facade over the functional core.
+
+    Keeps the original call sites — ``act`` / ``act_batch`` / ``update``
+    / ``sigma_at`` / ``observe_states`` — while all parameters live in
+    ``self.state`` (an ``AgentState``). The rollout path stays host-side
+    numpy (fast for the tiny MLPs); the update path either takes the
+    original one-host-sample-per-call route (``update``) or the fused
+    scan (``update_chunk``).
+    """
 
     def __init__(self, cfg: DDPGConfig, seed: int = 0):
         self.cfg = cfg
-        key = jax.random.PRNGKey(seed)
-        k1, k2, self.key = jax.random.split(key, 3)
-        dims_a = (cfg.state_dim,) + cfg.hidden + (cfg.action_dim,)
-        dims_c = (cfg.state_dim + cfg.action_dim,) + cfg.hidden + (1,)
-        self.actor = _mlp_init(k1, dims_a)
-        self.critic = _mlp_init(k2, dims_c)
-        self.target_actor = jax.tree.map(jnp.copy, self.actor)
-        self.target_critic = jax.tree.map(jnp.copy, self.critic)
-        self.opt_a = adam_init(self.actor)
-        self.opt_c = adam_init(self.critic)
+        self.state = agent_init(cfg, jax.random.PRNGKey(seed))
         self.norm = RunningNorm(cfg.state_dim)
-        self.reward_ma = 0.0
-        self.reward_ma_init = False
+        self._reward_ma_host = 0.0
+        self._reward_ma_init_host = False
+        self._ma_dirty = False       # True: state.reward_ma is newer
         self.np_rng = np.random.default_rng(seed)
         self._update = jax.jit(self._update_impl)
         self._actor_host = None            # numpy actor copy for rollouts
+
+    # --- reward-MA facade: after a fused chunk the device value is
+    # authoritative; pull it lazily so dispatching a chunk never blocks
+    def _sync_ma(self):
+        if self._ma_dirty:
+            self._reward_ma_host = float(self.state.reward_ma)
+            self._reward_ma_init_host = float(self.state.reward_ma_init) > 0
+            self._ma_dirty = False
+
+    @property
+    def reward_ma(self):
+        self._sync_ma()
+        return self._reward_ma_host
+
+    @reward_ma.setter
+    def reward_ma(self, v):
+        self._sync_ma()
+        self._reward_ma_host = float(v)
+
+    @property
+    def reward_ma_init(self):
+        self._sync_ma()
+        return self._reward_ma_init_host
+
+    @reward_ma_init.setter
+    def reward_ma_init(self, v):
+        self._sync_ma()
+        self._reward_ma_init_host = bool(v)
+
+    # --- state facade: legacy attribute names read/write the pytree ---
+    @property
+    def actor(self):
+        return self.state.actor
+
+    @actor.setter
+    def actor(self, v):
+        self.state = self.state._replace(actor=v)
+        self._actor_host = None     # rollouts must see the new weights
+
+    @property
+    def critic(self):
+        return self.state.critic
+
+    @critic.setter
+    def critic(self, v):
+        self.state = self.state._replace(critic=v)
+
+    @property
+    def target_actor(self):
+        return self.state.target_actor
+
+    @target_actor.setter
+    def target_actor(self, v):
+        self.state = self.state._replace(target_actor=v)
+
+    @property
+    def target_critic(self):
+        return self.state.target_critic
+
+    @target_critic.setter
+    def target_critic(self, v):
+        self.state = self.state._replace(target_critic=v)
+
+    @property
+    def opt_a(self):
+        return self.state.opt_a
+
+    @opt_a.setter
+    def opt_a(self, v):
+        self.state = self.state._replace(opt_a=v)
+
+    @property
+    def opt_c(self):
+        return self.state.opt_c
+
+    @opt_c.setter
+    def opt_c(self, v):
+        self.state = self.state._replace(opt_c=v)
 
     # ---------------- acting ----------------
     def act(self, state: np.ndarray, sigma: float,
@@ -150,7 +437,8 @@ class DDPGAgent:
             return self.np_rng.uniform(0, 1, self.cfg.action_dim) \
                 .astype(np.float32)
         s = self.norm.normalize(state.astype(np.float32))
-        mu = np.asarray(actor_forward(self.actor, jnp.asarray(s)))
+        mu = _actor_forward_np(self._host_actor(),
+                               np.atleast_2d(s))[0].astype(np.float32)
         if sigma > 0:
             # truncated normal on [0, 1] around mu (paper Eq. 7)
             for _ in range(16):
@@ -209,38 +497,19 @@ class DDPGAgent:
         if self._actor_host is None:
             self._actor_host = [
                 {k: np.asarray(v, np.float32) for k, v in layer.items()}
-                for layer in self.actor]
+                for layer in self.state.actor]
         return self._actor_host
 
     # ---------------- learning ----------------
     def _update_impl(self, actor, critic, t_actor, t_critic, opt_a, opt_c,
                      batch):
-        s, a, r, s2, done = batch
-        cfg = self.cfg
-
-        def critic_loss(cp):
-            a2 = actor_forward(t_actor, s2)
-            q_target = r + cfg.gamma * (1.0 - done) * critic_forward(
-                t_critic, s2, a2)
-            q = critic_forward(cp, s, a)
-            return jnp.mean((q - jax.lax.stop_gradient(q_target)) ** 2)
-
-        lc, gc = jax.value_and_grad(critic_loss)(critic)
-        critic, opt_c = adam_step(critic, gc, opt_c, cfg.critic_lr)
-
-        def actor_loss(ap):
-            return -jnp.mean(critic_forward(critic, s, actor_forward(ap, s)))
-
-        la, ga = jax.value_and_grad(actor_loss)(actor)
-        actor, opt_a = adam_step(actor, ga, opt_a, cfg.actor_lr)
-
-        t_actor = jax.tree.map(
-            lambda t, p: (1 - cfg.tau) * t + cfg.tau * p, t_actor, actor)
-        t_critic = jax.tree.map(
-            lambda t, p: (1 - cfg.tau) * t + cfg.tau * p, t_critic, critic)
-        return actor, critic, t_actor, t_critic, opt_a, opt_c, lc, la
+        return ddpg_step(self.cfg, actor, critic, t_actor, t_critic,
+                         opt_a, opt_c, batch)
 
     def update(self, replay) -> Tuple[float, float]:
+        """Original scalar path: one host replay sample, host reward-MA
+        advance and normalization, one jit dispatch. Kept verbatim as
+        the parity reference for ``update_chunk``."""
         cfg = self.cfg
         if len(replay) < cfg.batch_size:
             return 0.0, 0.0
@@ -256,13 +525,53 @@ class DDPGAgent:
         r = r - self.reward_ma
         s = self.norm.normalize(s)
         s2 = self.norm.normalize(s2)
-        batch = tuple(jnp.asarray(x) for x in (s, a, r, s2, done))
-        (self.actor, self.critic, self.target_actor, self.target_critic,
-         self.opt_a, self.opt_c, lc, la) = self._update(
-            self.actor, self.critic, self.target_actor, self.target_critic,
-            self.opt_a, self.opt_c, batch)
+        batch = tuple(jnp.asarray(x, jnp.float32) for x in (s, a, r, s2,
+                                                            done))
+        (actor, critic, t_actor, t_critic, opt_a, opt_c, lc, la) = \
+            self._update(self.state.actor, self.state.critic,
+                         self.state.target_actor, self.state.target_critic,
+                         self.state.opt_a, self.state.opt_c, batch)
+        self.state = self.state._replace(
+            actor=actor, critic=critic, target_actor=t_actor,
+            target_critic=t_critic, opt_a=opt_a, opt_c=opt_c)
         self._actor_host = None
         return float(lc), float(la)
+
+    def update_chunk(self, replay, n: int):
+        """Fused path: n updates (sampling included) in one dispatch
+        against a ``DeviceReplay``; returns the (n,) loss arrays.
+
+        Does not block: the losses (and the adopted state) are lazy jax
+        arrays, so rollout work can overlap the scan."""
+        if n <= 0 or len(replay) < self.cfg.batch_size:
+            return np.zeros(0, np.float32), np.zeros(0, np.float32)
+        st, (lc, la) = _update_chunk_jit(self.cfg, self.state_for_dispatch(),
+                                         replay.data, int(n))
+        self.adopt_state(st)
+        return lc, la
+
+    def state_for_dispatch(self) -> AgentState:
+        """Sync host-authoritative stats (running norm, reward-MA) into
+        the pytree so a fused dispatch sees the same values the scalar
+        path would."""
+        st = self.state._replace(
+            norm_count=jnp.asarray(self.norm.count, jnp.float32),
+            norm_mean=jnp.asarray(self.norm.mean, jnp.float32),
+            norm_var=jnp.asarray(self.norm.var, jnp.float32))
+        if not self._ma_dirty:      # else the device value is current
+            st = st._replace(
+                reward_ma=jnp.asarray(self._reward_ma_host, jnp.float32),
+                reward_ma_init=jnp.asarray(
+                    1.0 if self._reward_ma_init_host else 0.0, jnp.float32))
+        return st
+
+    def adopt_state(self, st: AgentState):
+        """Take a post-dispatch state as truth; the reward-MA is pulled
+        back to the host lazily (first read), so adopting never forces
+        a device sync. Invalidates the cached rollout actor."""
+        self.state = st
+        self._ma_dirty = True
+        self._actor_host = None
 
     def observe_states(self, states: np.ndarray):
         self.norm.update(states)

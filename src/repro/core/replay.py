@@ -1,6 +1,28 @@
-"""Replay buffer for the DDPG agents (paper: size 2000 transitions)."""
+"""Replay buffers for the DDPG agents (paper: size 2000 transitions).
+
+Two implementations with the same ring semantics:
+
+  * ``ReplayBuffer``  — host-side numpy buffer. The original (and
+    reference) implementation; still used by tests and by callers that
+    sample on the host.
+  * ``DeviceReplay``  — device-resident ring buffer whose storage is a
+    ``DeviceReplayData`` pytree of fixed-size jnp arrays. Pushes are one
+    jitted ring write; sampling is a pure function
+    (``device_replay_sample``) that also runs *inside* the fused
+    ``update_chunk`` scan (core/ddpg.py), so a whole block of agent
+    updates needs zero host round-trips for batch assembly.
+
+Both write incoming transitions at ``(ptr + i) % capacity`` and sample
+uniformly over the filled prefix, so the host buffer doubles as the
+property-test reference for the device one.
+"""
 from __future__ import annotations
 
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -34,16 +56,27 @@ class ReplayBuffer:
         if n == 0:
             return
         if n >= self.capacity:
-            # degenerate oversized batch: only the tail survives anyway
-            for i in range(n):
-                self.push(s[i], a[i], r[i], s_next[i], done[i])
-            return
-        idx = (self.ptr + np.arange(n)) % self.capacity
+            # oversized batch: only the last `capacity` rows survive; they
+            # land where sequential pushes would have left them, i.e. row
+            # n-1 at slot (ptr + n - 1) % capacity
+            a = np.asarray(a, np.float32)[n - self.capacity:]
+            r = np.asarray(r, np.float32)[n - self.capacity:]
+            s_next = np.asarray(s_next, np.float32)[n - self.capacity:]
+            done = np.asarray(done, np.float32)[n - self.capacity:]
+            s = s[n - self.capacity:]
+            idx = (self.ptr + n - self.capacity
+                   + np.arange(self.capacity)) % self.capacity
+        else:
+            idx = (self.ptr + np.arange(n)) % self.capacity
+            a = np.asarray(a, np.float32)
+            r = np.asarray(r, np.float32)
+            s_next = np.asarray(s_next, np.float32)
+            done = np.asarray(done, np.float32)
         self.states[idx] = s
-        self.actions[idx] = np.asarray(a, np.float32)
-        self.rewards[idx] = np.asarray(r, np.float32)
-        self.next_states[idx] = np.asarray(s_next, np.float32)
-        self.dones[idx] = np.asarray(done, np.float32)
+        self.actions[idx] = a
+        self.rewards[idx] = r
+        self.next_states[idx] = s_next
+        self.dones[idx] = done
         self.ptr = int((self.ptr + n) % self.capacity)
         self.size = int(min(self.size + n, self.capacity))
 
@@ -51,6 +84,127 @@ class ReplayBuffer:
         idx = self.rng.integers(0, self.size, size=batch)
         return (self.states[idx], self.actions[idx], self.rewards[idx],
                 self.next_states[idx], self.dones[idx])
+
+    def __len__(self):
+        return self.size
+
+
+# ===========================================================================
+# Device-resident replay
+# ===========================================================================
+
+class DeviceReplayData(NamedTuple):
+    """The pytree form of the ring buffer — what jitted code consumes.
+
+    ``ptr``/``size`` are 0-d int32 arrays so the whole tuple vmaps over
+    a stacked population of buffers.
+    """
+    states: jnp.ndarray        # (capacity, state_dim)
+    actions: jnp.ndarray       # (capacity, action_dim)
+    rewards: jnp.ndarray       # (capacity,)
+    next_states: jnp.ndarray   # (capacity, state_dim)
+    dones: jnp.ndarray         # (capacity,)
+    ptr: jnp.ndarray           # () int32
+    size: jnp.ndarray          # () int32
+
+
+def device_replay_init(capacity: int, state_dim: int,
+                       action_dim: int) -> DeviceReplayData:
+    return DeviceReplayData(
+        states=jnp.zeros((capacity, state_dim), jnp.float32),
+        actions=jnp.zeros((capacity, action_dim), jnp.float32),
+        rewards=jnp.zeros((capacity,), jnp.float32),
+        next_states=jnp.zeros((capacity, state_dim), jnp.float32),
+        dones=jnp.zeros((capacity,), jnp.float32),
+        ptr=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32))
+
+
+@jax.jit
+def _device_push(data: DeviceReplayData, s, a, r, s2, d, start, new_ptr,
+                 new_size) -> DeviceReplayData:
+    """Ring write of n transitions starting at slot ``start`` (n static
+    from the operand shapes; ptr/size bookkeeping is precomputed by the
+    host shim so oversized batches land where sequential pushes would)."""
+    capacity = data.states.shape[0]
+    n = s.shape[0]
+    idx = (start + jnp.arange(n)) % capacity
+    return DeviceReplayData(
+        states=data.states.at[idx].set(s),
+        actions=data.actions.at[idx].set(a),
+        rewards=data.rewards.at[idx].set(r),
+        next_states=data.next_states.at[idx].set(s2),
+        dones=data.dones.at[idx].set(d),
+        ptr=jnp.asarray(new_ptr, jnp.int32),
+        size=jnp.asarray(new_size, jnp.int32))
+
+
+def device_replay_sample(data: DeviceReplayData, key, batch: int):
+    """Uniform sample of `batch` transitions (pure; scan-safe)."""
+    idx = jax.random.randint(key, (batch,), 0, jnp.maximum(data.size, 1))
+    return (data.states[idx], data.actions[idx], data.rewards[idx],
+            data.next_states[idx], data.dones[idx])
+
+
+_sample_jit = jax.jit(device_replay_sample, static_argnums=(2,))
+
+
+class DeviceReplay:
+    """Host shim over ``DeviceReplayData`` with the ``ReplayBuffer`` API.
+
+    ``ptr``/``size`` are mirrored on the host so ``len()`` and the
+    ``size >= batch_size`` update gate never synchronize the device.
+    ``data`` is handed directly to ``update_chunk`` /
+    ``population_update_chunk`` for in-scan sampling.
+    """
+
+    def __init__(self, capacity: int, state_dim: int, action_dim: int,
+                 seed: int = 0):
+        self.capacity = capacity
+        self.state_dim = state_dim
+        self.action_dim = action_dim
+        self.data = device_replay_init(capacity, state_dim, action_dim)
+        self.ptr = 0
+        self.size = 0
+        self._key = jax.random.PRNGKey(seed)
+
+    def push(self, s, a, r, s_next, done):
+        self.push_batch(np.asarray(s, np.float32)[None],
+                        np.asarray(a, np.float32)[None],
+                        np.asarray([r], np.float32),
+                        np.asarray(s_next, np.float32)[None],
+                        np.asarray([float(done)], np.float32))
+
+    def push_batch(self, s, a, r, s_next, done):
+        s = np.asarray(s, np.float32)
+        n = s.shape[0]
+        if n == 0:
+            return
+        a = np.asarray(a, np.float32)
+        r = np.asarray(r, np.float32)
+        s_next = np.asarray(s_next, np.float32)
+        done = np.asarray(done, np.float32)
+        if n >= self.capacity:        # only the tail survives (see host ref)
+            s, a, r = s[n - self.capacity:], a[n - self.capacity:], \
+                r[n - self.capacity:]
+            s_next, done = s_next[n - self.capacity:], \
+                done[n - self.capacity:]
+        # slot of the first surviving row under sequential-push semantics
+        start = (self.ptr + n - s.shape[0]) % self.capacity
+        self.ptr = int((self.ptr + n) % self.capacity)
+        self.size = int(min(self.size + n, self.capacity))
+        self.data = _device_push(self.data, s, a, r, s_next, done,
+                                 start, self.ptr, self.size)
+
+    def sample(self, batch: int):
+        """Host-visible uniform sample (compat path + determinism tests).
+
+        Draws from the same jax PRNG stream per instance: same seed +
+        same pushes -> same sample sequence.
+        """
+        self._key, k = jax.random.split(self._key)
+        out = _sample_jit(self.data, k, batch)
+        return tuple(np.asarray(x) for x in out)
 
     def __len__(self):
         return self.size

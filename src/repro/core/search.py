@@ -16,43 +16,55 @@ with the shared episode reward.
 ``BatchedCompressionSearch`` runs K episodes as one batched rollout
 with identical per-episode semantics (each episode keeps its own sigma
 from the decay schedule, its own warmup flag, and the shared-episode-
-reward transition scheme):
+reward transition scheme): ``build_state_batch`` + one vectorized
+oracle call per step for the states, ``DDPGAgent.act_batch`` for the
+actions, one ``jit(vmap(accuracy))`` + one batched oracle call for
+validation, and a single bulk ring write for the K*T transitions.
 
-  * states     — ``build_state_batch`` tiles the static per-unit
-                 features and reads the decided-latency share from one
-                 vectorized oracle call (``policy_latency_batch``,
-                 numpy array ops over a (K, L) policy stack) instead of
-                 K per-layer Python sweeps;
-  * actions    — ``DDPGAgent.act_batch``: one actor forward over the
-                 stacked states, row-wise truncated-normal exploration;
-  * validation — one ``jit(vmap(accuracy))`` call over K stacked
-                 cspecs and one batched oracle call, instead of K
-                 sequential jit dispatches;
-  * replay     — ``ReplayBuffer.push_batch`` bulk-inserts the K*T
-                 transitions in one ring write.
+Where the learning happens (PR 2: the functional agent core)
+-----------------------------------------------------------
+Both engines store transitions in a device-resident ``DeviceReplay``
+(``core/replay.py``) and dispatch *all* of an episode batch's critic/
+actor/target updates as ONE jitted ``lax.scan`` —
+``DDPGAgent.update_chunk`` over the ``AgentState`` pytree
+(``core/ddpg.py``). Replay sampling, reward moving-average centering,
+state standardization, and the Adam/soft-target math all run inside the
+scan; the only host sync per episode batch is the loss array. The
+scalar engine fuses its ``updates_per_episode`` steps the same way, so
+the two paths differ only in rollout batching.
 
-Semantic differences vs the scalar loop, both at batch granularity:
-critic/actor updates for the K episodes of a batch run after the whole
-batch (same total update count) rather than interleaved between
-episodes, and the state normalizer's running stats likewise advance
-once per batch, so episodes within a batch act on the stats from the
-previous batch boundary.
+``PopulationSearch`` stacks P member searches (p/q/pq agents, multiple
+seeds, or one member per hardware target) and replaces their P separate
+update dispatches with one ``jit(vmap(update_chunk))`` over the stacked
+``AgentState``/replay pytrees. Members with different native action
+dimensionalities share one population by padding ``action_dim`` to the
+maximum (``map_actions`` consumes a prefix of the action vector, so
+trailing entries are inert for single-method agents).
+
+Semantic notes, both at batch granularity: critic/actor updates for the
+K episodes of a batch run after the whole batch (same total update
+count) rather than interleaved between episodes, and the state
+normalizer's running stats advance once per batch, so episodes within a
+batch act on the stats from the previous batch boundary. Within an
+update chunk the normalizer snapshot is frozen and the reward moving
+average advances per step — exactly the scalar ``DDPGAgent.update``
+semantics, property-tested in ``tests/test_agent_core.py``.
 """
 from __future__ import annotations
 
 import copy
-import time
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import jax
 import numpy as np
 
-from repro.core.ddpg import DDPGAgent, DDPGConfig
+from repro.core.ddpg import (DDPGAgent, DDPGConfig, population_update_chunk,
+                             tree_index, tree_stack)
 from repro.core.latency import (V5E, HardwareTarget, LatencyContext,
                                 policy_latency, policy_latency_batch)
 from repro.core.policy import Policy, map_actions, stack_policies
-from repro.core.replay import ReplayBuffer
+from repro.core.replay import DeviceReplay
 from repro.core.reward import RewardConfig, compute_reward
 from repro.core.sensitivity import SensitivityResult, run_sensitivity
 from repro.core.spec import effective_bits
@@ -63,7 +75,7 @@ from repro.core.state import build_state, build_state_batch, state_dim
 class SearchConfig:
     methods: str = "pq"                # p | q | pq
     episodes: int = 120
-    reward: RewardConfig = RewardConfig()
+    reward: RewardConfig = field(default_factory=RewardConfig)
     ddpg: DDPGConfig = None            # filled in __post_init__ of the search
     seed: int = 0
     window: int = 0                    # attention window for the oracle
@@ -121,15 +133,20 @@ class CompressionSearch:
         self.hw = hw
         self.ctx = ctx
         self.val_batch = val_batch
-        a_dim = Policy([]).n_actions(search_cfg.methods)
+        native = Policy([]).n_actions(search_cfg.methods)
         ddpg_cfg = search_cfg.ddpg or DDPGConfig(
-            state_dim=state_dim(a_dim), action_dim=a_dim)
-        if ddpg_cfg.state_dim != state_dim(a_dim):
+            state_dim=state_dim(native), action_dim=native)
+        # a provided action_dim larger than the method's native one pads
+        # the action space (population members must share shapes); a
+        # smaller one is corrected up to native
+        a_dim = max(native, ddpg_cfg.action_dim)
+        if (ddpg_cfg.state_dim, ddpg_cfg.action_dim) != (state_dim(a_dim),
+                                                         a_dim):
             ddpg_cfg = DDPGConfig(**{**ddpg_cfg.__dict__,
                                      "state_dim": state_dim(a_dim),
                                      "action_dim": a_dim})
         self.agent = DDPGAgent(ddpg_cfg, seed=search_cfg.seed)
-        self.replay = ReplayBuffer(ddpg_cfg.buffer_size, ddpg_cfg.state_dim,
+        self.replay = DeviceReplay(ddpg_cfg.buffer_size, ddpg_cfg.state_dim,
                                    a_dim, seed=search_cfg.seed)
         self.sens = sens if sens is not None else run_sensitivity(
             cmodel, calib_batch if calib_batch is not None else val_batch)
@@ -141,6 +158,21 @@ class CompressionSearch:
             cmodel.build_cspec(self.ref_policy)))
         self.steps = [i for i, s in enumerate(self.specs)
                       if _actionable(s, search_cfg.methods)]
+        self._pending_updates = 0
+        self._defer_updates = False     # PopulationSearch batches flushes
+
+    # ------------------------------------------------------------------
+    def _flush_updates(self):
+        """Dispatch the accumulated update budget as one fused chunk."""
+        n = self._pending_updates
+        self._pending_updates = 0
+        if n > 0 and len(self.replay) >= self.agent.cfg.batch_size:
+            self.agent.update_chunk(self.replay, n)
+
+    def _queue_updates(self, n: int):
+        self._pending_updates += n
+        if not self._defer_updates:
+            self._flush_updates()
 
     # ------------------------------------------------------------------
     def run_episode(self, episode: int) -> EpisodeRecord:
@@ -177,15 +209,18 @@ class CompressionSearch:
                              cfg.window)
         reward = compute_reward(cfg.reward, acc, lat.total_s,
                                 self.ref_lat.total_s)
-        # push transitions — one shared episode reward (paper §Schema)
-        self.agent.observe_states(np.stack(states))
-        for i in range(len(states)):
-            s_next = states[i + 1] if i + 1 < len(states) else states[i]
-            done = i + 1 == len(states)
-            self.replay.push(states[i], actions[i], reward, s_next, done)
+        # push transitions — one shared episode reward (paper §Schema),
+        # one bulk ring write for the whole chain
+        T = len(states)
+        st_arr = np.stack(states)
+        self.agent.observe_states(st_arr)
+        nxt = np.concatenate([st_arr[1:], st_arr[-1:]])
+        done = np.zeros(T, np.float32)
+        done[-1] = 1.0
+        self.replay.push_batch(st_arr, np.stack(actions),
+                               np.full(T, reward, np.float32), nxt, done)
         if not warmup:
-            for _ in range(self.agent.cfg.updates_per_episode):
-                self.agent.update(self.replay)
+            self._queue_updates(self.agent.cfg.updates_per_episode)
 
         ratio = lat.total_s / (cfg.reward.target_ratio *
                                self.ref_lat.total_s)
@@ -305,8 +340,7 @@ class BatchedCompressionSearch(CompressionSearch):
             np.repeat(rewards, T).astype(np.float32),
             order(nxt), order(done))
         n_live = int((~warmup).sum())
-        for _ in range(self.agent.cfg.updates_per_episode * n_live):
-            self.agent.update(self.replay)
+        self._queue_updates(self.agent.cfg.updates_per_episode * n_live)
 
         records = []
         for j, e in enumerate(eps):
@@ -328,3 +362,90 @@ class BatchedCompressionSearch(CompressionSearch):
     def _run_chunk(self, first_episode: int,
                    k: int) -> List[EpisodeRecord]:
         return self.run_episode_batch(first_episode, k)
+
+
+class PopulationSearch:
+    """P member searches whose agents share every update dispatch.
+
+    This is the paper's actual workload shape: the p/q/pq agents (and,
+    for hardware-specific policies, one member per target) search
+    concurrently. Members roll out independently (each already batched
+    over K episodes), but their per-chunk update budgets are dispatched
+    as ONE ``jit(vmap(update_chunk))`` over the stacked ``AgentState``
+    and ``DeviceReplay`` pytrees — P× fewer dispatches on the dominant
+    cost of the loop.
+
+    Requirements: members must share one ``DDPGConfig`` (pad
+    ``action_dim`` to the population maximum for mixed-method
+    populations; see the module docstring) and one chunk size. Members
+    whose pending budgets diverge (e.g. different warmup positions)
+    fall back to per-member fused flushes for that chunk.
+    """
+
+    def __init__(self, members: Sequence[CompressionSearch]):
+        if not members:
+            raise ValueError("PopulationSearch needs at least one member")
+        self.members = list(members)
+        cfg0 = self.members[0].agent.cfg
+        for m in self.members[1:]:
+            if m.agent.cfg != cfg0:
+                raise ValueError(
+                    "population members must share a DDPGConfig (pad "
+                    f"action_dim): {m.agent.cfg} != {cfg0}")
+        if len({m._chunk_size() for m in self.members}) != 1:
+            raise ValueError("population members must share a chunk size")
+
+    def run(self, episodes: Optional[int] = None,
+            verbose: bool = False) -> List[SearchResult]:
+        """Run all members for the same episode count; returns one
+        ``SearchResult`` per member, aligned with ``self.members``."""
+        n = episodes or min(m.cfg.episodes for m in self.members)
+        histories = [[] for _ in self.members]
+        bests = [None for _ in self.members]
+        saved = [m._defer_updates for m in self.members]
+        try:
+            for m in self.members:
+                m._defer_updates = True
+            e = 0
+            while e < n:
+                k = min(self.members[0]._chunk_size(), n - e)
+                for i, m in enumerate(self.members):
+                    for rec in m._run_chunk(e, k):
+                        histories[i].append(rec)
+                        if bests[i] is None or rec.reward > bests[i].reward:
+                            bests[i] = rec
+                self._dispatch_updates()
+                if verbose:
+                    last = e + k - 1
+                    row = " ".join(
+                        f"{m.cfg.methods}:{histories[i][-1].reward:+.3f}"
+                        for i, m in enumerate(self.members))
+                    print(f"  ep {last:4d} rewards [{row}]")
+                e += k
+        finally:
+            for m, flag in zip(self.members, saved):
+                m._defer_updates = flag
+        return [SearchResult(history=histories[i], best=bests[i],
+                             ref_latency_s=m.ref_lat.total_s,
+                             ref_accuracy=m.ref_acc)
+                for i, m in enumerate(self.members)]
+
+    def _dispatch_updates(self):
+        """One vmapped chunk for the whole population when the members'
+        budgets agree; per-member fused flushes otherwise."""
+        ns = [m._pending_updates for m in self.members]
+        ready = all(len(m.replay) >= m.agent.cfg.batch_size
+                    for m in self.members)
+        if len(set(ns)) == 1 and ns[0] > 0 and ready:
+            n = ns[0]
+            states = tree_stack(
+                [m.agent.state_for_dispatch() for m in self.members])
+            datas = tree_stack([m.replay.data for m in self.members])
+            new_states, _losses = population_update_chunk(
+                self.members[0].agent.cfg, states, datas, n)
+            for i, m in enumerate(self.members):
+                m.agent.adopt_state(tree_index(new_states, i))
+                m._pending_updates = 0
+        else:
+            for m in self.members:
+                m._flush_updates()

@@ -4,6 +4,11 @@ Features per time step (one compressible unit): position, unit kind,
 dimensions, FLOPs/weight shares, sensitivity probes, previous action, and
 latency-budget bookkeeping under the partial policy (AMC's reduced/rest
 features, computed against the hardware latency oracle instead of FLOPs).
+
+``prev_action`` (and hence ``state_dim``) is sized by the agent's
+``action_dim``, which may be padded above the method's native count so
+mixed-method members of a ``PopulationSearch`` share one vmappable shape
+(trailing entries stay zero/inert for single-method agents).
 """
 from __future__ import annotations
 

@@ -23,7 +23,7 @@ from repro.core.policy import Policy, map_actions, stack_policies
 from repro.core.replay import ReplayBuffer
 from repro.core.reward import RewardConfig
 from repro.core.search import (BatchedCompressionSearch, CompressionSearch,
-                               SearchConfig)
+                               PopulationSearch, SearchConfig)
 from repro.core.state import build_state, build_state_batch
 
 CFG = ArchConfig(name="o", num_layers=4, d_model=256, num_heads=8,
@@ -292,3 +292,68 @@ def test_batched_search_sigma_schedule(tiny_lm):
     want = [search.agent.sigma_at(e) for e in range(6)]
     got = [r.sigma for r in recs]
     np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+# -------------------------------------------------------- the population
+
+def _mk_population_member(tiny_lm, methods, batch_size=3):
+    """Batched member with action_dim padded to the pq maximum so
+    p/q/pq agents stack into one vmappable population."""
+    cm, batch = tiny_lm
+    ctx = LatencyContext(tokens=1, seq_ctx=256, mode="decode", batch=1)
+    scfg = SearchConfig(
+        methods=methods, episodes=6, reward=RewardConfig(target_ratio=0.5),
+        ddpg=DDPGConfig(warmup_episodes=2, updates_per_episode=2,
+                        batch_size=16, buffer_size=256, action_dim=3))
+    return BatchedCompressionSearch(cm, batch, scfg, ctx,
+                                    batch_size=batch_size)
+
+
+def test_population_runs_mixed_methods(tiny_lm):
+    """p/q/pq members share update dispatches; per-member histories keep
+    scalar-engine semantics (episode order, sigma schedule, legality)."""
+    members = [_mk_population_member(tiny_lm, m) for m in ("p", "q", "pq")]
+    pop = PopulationSearch(members)
+    results = pop.run(episodes=6)
+    assert len(results) == 3
+    for m, res in zip(members, results):
+        assert [r.episode for r in res.history] == list(range(6))
+        want = [m.agent.sigma_at(e) for e in range(6)]
+        np.testing.assert_allclose([r.sigma for r in res.history], want,
+                                   atol=1e-6)
+        for rec in res.history:
+            assert np.isfinite(rec.reward)
+            assert len(rec.policy.cmps) == len(m.specs)
+        # updates ran (post-warmup budgets were dispatched and cleared)
+        assert m._pending_updates == 0
+        assert not m._defer_updates
+    # padded action dims: all members share the pq agent shape
+    assert len({m.agent.cfg.action_dim for m in members}) == 1
+
+
+def test_population_warmup_matches_independent(tiny_lm):
+    """Before any update fires, a population member's rollout equals the
+    same search run independently (identical seeds -> identical RNG)."""
+    member = _mk_population_member(tiny_lm, "pq")
+    solo = _mk_population_member(tiny_lm, "pq")
+    pop_recs = PopulationSearch([member]).run(episodes=2)[0].history
+    solo_recs = solo.run(episodes=2).history
+    for a, b in zip(pop_recs, solo_recs):
+        assert a.reward == pytest.approx(b.reward, abs=1e-6)
+        assert a.accuracy == pytest.approx(b.accuracy, abs=1e-6)
+        assert a.latency_s == pytest.approx(b.latency_s, rel=1e-9)
+
+
+def test_population_rejects_mismatched_configs(tiny_lm):
+    native_pq = _mk_population_member(tiny_lm, "pq")
+    cm, batch = tiny_lm
+    ctx = LatencyContext(tokens=1, seq_ctx=256, mode="decode", batch=1)
+    scfg = SearchConfig(
+        methods="p", episodes=6, reward=RewardConfig(target_ratio=0.5),
+        ddpg=DDPGConfig(warmup_episodes=2, updates_per_episode=2,
+                        batch_size=16, buffer_size=256))   # native dims
+    native_p = BatchedCompressionSearch(cm, batch, scfg, ctx, batch_size=3)
+    with pytest.raises(ValueError):
+        PopulationSearch([native_pq, native_p])
+    with pytest.raises(ValueError):
+        PopulationSearch([])
