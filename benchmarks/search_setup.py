@@ -10,6 +10,7 @@ from __future__ import annotations
 import json
 import os
 import time
+from contextlib import contextmanager
 
 from benchmarks.common import IMG_CTX, SERVE_CTX, get_lm_testbed, \
     get_resnet_testbed
@@ -18,8 +19,12 @@ from repro.core.ddpg import DDPGConfig
 from repro.core.latency import LatencyContext
 from repro.core.reward import RewardConfig
 from repro.core.search import (BatchedCompressionSearch, CompressionSearch,
-                               PopulationSearch, SearchConfig)
+                               FusedCompressionSearch, PopulationSearch,
+                               SearchConfig)
 from repro.core.sensitivity import run_sensitivity
+
+ENGINES = {"scalar": CompressionSearch, "batched": BatchedCompressionSearch,
+           "fused": FusedCompressionSearch}
 
 FULL = os.environ.get("GALEN_BENCH_FULL", "0") == "1"
 
@@ -70,6 +75,15 @@ def lm_batched_search(methods: str, c: float, seed: int = 0, episodes=None,
                      cls=BatchedCompressionSearch, batch_size=batch_size)
 
 
+def lm_fused_search(methods: str, c: float, seed: int = 0, episodes=None,
+                    sens_enabled: bool = True,
+                    batch_size: int = 8) -> FusedCompressionSearch:
+    """lm_search with the fused engine (whole rollout = one dispatch)."""
+    return lm_search(methods, c, seed=seed, episodes=episodes,
+                     sens_enabled=sens_enabled,
+                     cls=FusedCompressionSearch, batch_size=batch_size)
+
+
 def resnet_search(methods: str, c: float, seed: int = 0,
                   episodes=None) -> CompressionSearch:
     rcfg, params, val, acc = get_resnet_testbed()
@@ -112,8 +126,12 @@ def _tiny_testbed():
     return _tiny_testbed_cache["lm"]
 
 
-def _tiny_engine(batched: bool, batch_size: int, updates: int,
+def _tiny_engine(engine, batch_size: int, updates: int,
                  methods: str = "pq", action_dim: int = 0, seed: int = 0):
+    """``engine``: "scalar" | "batched" | "fused" (bools kept for the
+    original scalar/batched call sites)."""
+    if isinstance(engine, bool):
+        engine = "batched" if engine else "scalar"
     cm, batch = _tiny_testbed()
     ctx = LatencyContext(tokens=1, seq_ctx=256, mode="decode", batch=1)
     scfg = SearchConfig(
@@ -122,10 +140,10 @@ def _tiny_engine(batched: bool, batch_size: int, updates: int,
                         batch_size=16, buffer_size=512,
                         action_dim=action_dim or 1),
         seed=seed)
-    if batched:
-        return BatchedCompressionSearch(cm, batch, scfg, ctx,
-                                        batch_size=batch_size)
-    return CompressionSearch(cm, batch, scfg, ctx)
+    cls = ENGINES[engine]
+    if engine == "scalar":
+        return cls(cm, batch, scfg, ctx)
+    return cls(cm, batch, scfg, ctx, batch_size=batch_size)
 
 
 def episodes_per_sec(search, episodes: int = 32,
@@ -149,28 +167,103 @@ def episodes_per_sec(search, episodes: int = 32,
     return episodes / best
 
 
+@contextmanager
+def fused_dispatch_probe(search):
+    """Compile-counter hook: counts REAL invocations of the fused
+    path's compiled entry points (rollout jit, fused validation jit,
+    replay ring-write jit, update-chunk jit) by wrapping the callables
+    themselves — not trusting the engine's own ``dispatch_log`` — and
+    plants canaries on the per-step host path (``act_batch``, the numpy
+    batch oracle) so a regression that silently falls back to L host
+    steps per batch is caught even though it makes no jit calls."""
+    import repro.core.ddpg as ddpg_mod
+    import repro.core.replay as replay_mod
+    import repro.core.search as search_mod
+    counts = {"rollout": 0, "validate": 0, "push": 0, "update": 0,
+              "host_steps": 0}
+    saved = []
+
+    def wrap(obj, name, key):
+        fn = getattr(obj, name)
+        saved.append((obj, name, name in vars(obj), fn))
+
+        def counting(*a, **kw):
+            counts[key] += 1
+            return fn(*a, **kw)
+
+        setattr(obj, name, counting)
+
+    wrap(search, "_rollout", "rollout")
+    wrap(search.cmodel, "accuracy_policy_batch", "validate")
+    wrap(replay_mod, "_device_push", "push")
+    wrap(ddpg_mod, "_update_chunk_jit", "update")
+    # canaries — the numpy engines' per-unit-step host machinery
+    wrap(search.agent, "act_batch", "host_steps")
+    wrap(search_mod, "policy_latency_batch", "host_steps")
+    try:
+        yield counts
+    finally:
+        for obj, name, was_own, fn in reversed(saved):
+            if was_own:
+                setattr(obj, name, fn)
+            else:
+                delattr(obj, name)
+
+
+def assert_fused_dispatch_count(search, first_episode: int,
+                                batch_size: int) -> dict:
+    """One post-compile episode batch on the fused engine must stay
+    within the ISSUE 3 bound: rollout + validation + ring write +
+    update chunk <= 4 jit executions, zero per-step host work. Also
+    checks the engine's ``dispatch_log`` agrees with the measured
+    counts. Runs in the weekly job; a regression fails it."""
+    search.dispatch_log.clear()
+    with fused_dispatch_probe(search) as counts:
+        search.run_episode_batch(first_episode, batch_size)
+        search._flush_updates()
+    total = sum(counts[k] for k in ("rollout", "validate", "push",
+                                    "update"))
+    assert counts["host_steps"] == 0, \
+        f"per-step host path ran under the fused engine: {counts}"
+    assert total <= 4, f"fused engine made {total} dispatches: {counts}"
+    assert len(search.dispatch_log) == total, \
+        f"dispatch_log {search.dispatch_log} != measured {counts}"
+    return counts
+
+
 def engine_comparison(batch_size: int = 8, episodes: int = 32,
                       updates: int = 0, verbose: bool = True) -> dict:
-    """Episodes/sec, scalar vs batched, on the tiny LM.
+    """Episodes/sec, scalar vs batched vs fused, on the tiny LM.
 
-    ``updates=0`` isolates rollout+validation throughput; with updates
-    enabled both engines dispatch each episode batch's updates as one
-    fused ``update_chunk`` scan (PR 2), so the batched engine amortizes
+    ``updates=0`` isolates rollout+validation throughput — where the
+    fused engine's one-dispatch rollout pays off most; with updates
+    enabled every engine dispatches each episode batch's updates as one
+    fused ``update_chunk`` scan (PR 2), so the rollout engines amortize
     rollout AND learning dispatch.
     """
-    scalar = episodes_per_sec(_tiny_engine(False, batch_size, updates),
+    scalar = episodes_per_sec(_tiny_engine("scalar", batch_size, updates),
                               episodes)
-    batched = episodes_per_sec(_tiny_engine(True, batch_size, updates),
+    batched = episodes_per_sec(_tiny_engine("batched", batch_size, updates),
                                episodes)
+    fused_search = _tiny_engine("fused", batch_size, updates)
+    fused = episodes_per_sec(fused_search, episodes)
+    counts = assert_fused_dispatch_count(
+        fused_search, first_episode=64, batch_size=batch_size)
+    n_disp = sum(counts[k] for k in ("rollout", "validate", "push",
+                                     "update"))
     out = {"table": "engine", "batch_size": batch_size,
            "episodes": episodes, "updates_per_episode": updates,
            "scalar_eps_per_s": round(scalar, 2),
            "batched_eps_per_s": round(batched, 2),
-           "speedup": round(batched / scalar, 2)}
+           "fused_eps_per_s": round(fused, 2),
+           "speedup": round(batched / scalar, 2),
+           "fused_speedup_vs_batched": round(fused / batched, 2),
+           "fused_dispatches_per_batch": n_disp}
     if verbose:
         print(f"[engine] K={batch_size} updates={updates}: "
-              f"scalar {scalar:.1f} eps/s, batched {batched:.1f} eps/s "
-              f"-> {batched / scalar:.2f}x", flush=True)
+              f"scalar {scalar:.1f} eps/s, batched {batched:.1f} eps/s, "
+              f"fused {fused:.1f} eps/s ({n_disp} dispatches/batch) "
+              f"-> fused/batched {fused / batched:.2f}x", flush=True)
     return out
 
 

@@ -17,6 +17,11 @@ the check fall back to INT8. Our TPU v5e analogue:
 """
 from __future__ import annotations
 
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
 from repro.core.spec import LayerCMP, LayerSpec
 
 MXU_LANE = 128
@@ -50,3 +55,39 @@ def legalize(spec: LayerSpec, cmp: LayerCMP) -> LayerCMP:
         # paper: unsupported layers take the INT8 option instead
         cmp.mode, cmp.w_bits, cmp.a_bits = "INT8", 8, 8
     return cmp
+
+
+# ===========================================================================
+# Array form — the same legality rules as data, for vectorized mapping
+# ===========================================================================
+
+class LegalTables(NamedTuple):
+    """Per-spec legality parameters as float32/bool arrays (one entry per
+    ``LayerSpec``), the table form consumed by ``map_actions_batch`` and
+    the fused rollout scan.  All entries are plain numpy: they are
+    policy-independent constants that bake into a jit trace."""
+    prune_dim: np.ndarray      # (L,) f32
+    granularity: np.ndarray    # (L,) f32  (>= 1)
+    prunable: np.ndarray       # (L,) bool  (prunable AND prune_dim > 0)
+    quantizable: np.ndarray    # (L,) bool
+    mix_ok: np.ndarray         # (L,) bool  (mix_allowed per spec)
+
+
+def legal_tables(specs: Sequence[LayerSpec]) -> LegalTables:
+    return LegalTables(
+        prune_dim=np.asarray([s.prune_dim for s in specs], np.float32),
+        granularity=np.asarray(
+            [max(1, s.prune_granularity) for s in specs], np.float32),
+        prunable=np.asarray([bool(s.prunable and s.prune_dim)
+                             for s in specs]),
+        quantizable=np.asarray([s.quantizable for s in specs]),
+        mix_ok=np.asarray([mix_allowed(s) for s in specs]))
+
+
+def round_keep_arrays(keep, granularity, prune_dim):
+    """``round_keep`` as array ops (jnp; traceable): round kept counts
+    down to the granularity, floor one granule, cap at the prunable
+    dim.  Inputs broadcast; counts stay exact in f32."""
+    rounded = jnp.maximum(jnp.floor(keep / granularity) * granularity,
+                          granularity)
+    return jnp.minimum(rounded, prune_dim)

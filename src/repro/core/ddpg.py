@@ -212,6 +212,27 @@ def agent_act(cfg: DDPGConfig, st: AgentState, s, key, sigma):
     return jnp.where(sigma > 0.0, noisy, mu)
 
 
+def agent_act_batch(cfg: DDPGConfig, st: AgentState, states, key, sigmas,
+                    warmup):
+    """Pure batched acting for the fused rollout scan: K states -> K
+    actions in one traceable block.
+
+    Per-row semantics match the engines' host path: warmup rows draw
+    uniform [0,1) actions; live rows run the standardized actor with
+    per-row truncated-normal exploration (16-candidate rejection via
+    ``agent_act``). All randomness comes from ``key`` — one split for
+    the warmup uniforms, then one subkey per row — so host code (parity
+    tests, the numpy reference) can replay the exact draws.
+    """
+    K = states.shape[0]
+    k_uni, k_act = jax.random.split(key)
+    uniform = jax.random.uniform(k_uni, (K, cfg.action_dim), jnp.float32)
+    keys = jax.random.split(k_act, K)
+    acted = jax.vmap(lambda s, k, sig: agent_act(cfg, st, s, k, sig))(
+        states, keys, sigmas)
+    return jnp.where(jnp.asarray(warmup)[:, None], uniform, acted)
+
+
 def ddpg_step(cfg: DDPGConfig, actor, critic, t_actor, t_critic,
               opt_a, opt_c, batch):
     """One critic + actor + soft-target update on a prepared batch

@@ -27,8 +27,9 @@ from __future__ import annotations
 import math
 import re
 from dataclasses import dataclass, field
-from typing import Optional, Sequence, Union
+from typing import NamedTuple, Optional, Sequence, Union
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policy import Policy, PolicyBatch, stack_policies
@@ -414,6 +415,32 @@ class BatchOracle:
             overhead_s=self.n_ops * hw.op_overhead)
 
 
+def fifo_cached(cache: dict, max_entries: int, key, is_valid, factory):
+    """Identity-guarded FIFO cache lookup, shared by the oracle and
+    static-feature caches.
+
+    Entries are value-keyed (``key`` may embed ``id()``s of
+    identity-keyed operands); ``is_valid(hit)`` re-probes those
+    identities so a recycled id can never serve a stale entry (the
+    cached value holds strong refs, keeping live ids stable). On
+    insert, the OLDEST entries are evicted (dict = insertion order) —
+    a long multi-member search only recomputes one member's tables,
+    never everyone's at once.
+    """
+    hit = cache.get(key)
+    if hit is not None and is_valid(hit):
+        return hit
+    # drop a stale entry for this key first: the rebuild replaces it
+    # (no growth, so nobody else gets evicted) and the fresh entry
+    # takes a NEW insertion position instead of inheriting the old one
+    cache.pop(key, None)
+    while len(cache) >= max_entries:
+        del cache[next(iter(cache))]
+    hit = factory()
+    cache[key] = hit
+    return hit
+
+
 _oracle_cache: dict = {}
 _ORACLE_CACHE_MAX = 64
 
@@ -421,16 +448,11 @@ _ORACLE_CACHE_MAX = 64
 def get_batch_oracle(specs: Sequence[LayerSpec], hw: HardwareTarget,
                      ctx: LatencyContext, window: int = 0) -> BatchOracle:
     # ctx/hw are frozen dataclasses, so value-keying is safe; specs are
-    # identity-keyed (the cached oracle holds a strong ref, so the id
-    # cannot be recycled while the entry lives)
-    key = (id(specs), hw, ctx, window)
-    hit = _oracle_cache.get(key)
-    if hit is None or hit.specs is not specs:
-        if len(_oracle_cache) >= _ORACLE_CACHE_MAX:
-            _oracle_cache.clear()
-        hit = BatchOracle(specs, hw, ctx, window)
-        _oracle_cache[key] = hit
-    return hit
+    # identity-keyed with the fifo_cached identity guard
+    return fifo_cached(
+        _oracle_cache, _ORACLE_CACHE_MAX, (id(specs), hw, ctx, window),
+        lambda o: o.specs is specs,
+        lambda: BatchOracle(specs, hw, ctx, window))
 
 
 def policy_latency_batch(
@@ -448,6 +470,177 @@ def policy_latency_batch(
     if not isinstance(policies, PolicyBatch):
         policies = stack_policies(specs, policies)
     return get_batch_oracle(specs, hw, ctx, window)(policies)
+
+
+# ===========================================================================
+# Traceable analytic oracle — the BatchOracle in jnp, for in-scan rollouts
+# ===========================================================================
+
+class HwParams(NamedTuple):
+    """The hardware scalars the roofline actually divides by, as a
+    vmappable pytree: stack P of them and ``vmap`` the oracle to
+    evaluate one policy batch per hardware target in a single dispatch.
+    ``mxu_align`` stays static on the oracle (it shapes the padding
+    formula, and every supported TPU generation uses 128)."""
+    peak_bf16: jnp.ndarray
+    peak_int8: jnp.ndarray
+    hbm_bw: jnp.ndarray
+    ici_bw: jnp.ndarray
+    op_overhead: jnp.ndarray
+
+
+def hw_params(hw: HardwareTarget) -> HwParams:
+    return HwParams(
+        peak_bf16=jnp.asarray(hw.peak_bf16, jnp.float32),
+        peak_int8=jnp.asarray(hw.peak_int8, jnp.float32),
+        hbm_bw=jnp.asarray(hw.hbm_bw, jnp.float32),
+        ici_bw=jnp.asarray(hw.ici_bw, jnp.float32),
+        op_overhead=jnp.asarray(hw.op_overhead, jnp.float32))
+
+
+class JaxBatchOracle:
+    """``BatchOracle``'s roofline as pure jnp — the oracle the fused
+    rollout scan probes every layer step without leaving the device.
+
+    Tables are borrowed from the (cached) numpy oracle and baked into
+    the trace as f32 constants; everything hardware-rate-dependent is
+    deferred to an ``HwParams`` argument so one traced oracle serves a
+    vmapped stack of hardware targets. Matches the numpy oracle
+    term-for-term up to f32 rounding (the parity property tests bound
+    the drift at 1e-5 on the downstream features).
+    """
+
+    def __init__(self, specs: Sequence[LayerSpec], hw: HardwareTarget,
+                 ctx: LatencyContext, window: int = 0):
+        b = get_batch_oracle(specs, hw, ctx, window)
+        f32 = lambda x: jnp.asarray(x, jnp.float32)
+        self.specs, self.hw, self.ctx, self.window = specs, hw, ctx, window
+        self.hwp = hw_params(hw)
+        self.is_conv = jnp.asarray(b.is_conv)
+        self.is_embed = jnp.asarray(b.is_embed)
+        self.is_qkv = jnp.asarray(b.is_qkv)
+        self.is_moe = jnp.asarray(b.is_moe)
+        self.prunable = jnp.asarray(b.prunable)
+        self.in_dim = f32(b.in_dim)
+        self.out_dim = f32(b.out_dim)
+        self.prune_dim = f32(b.prune_dim)
+        self.weight_elems = f32(b.weight_elems)
+        self.px = f32(b.px)
+        self.hd = f32(b.hd)
+        self.kv = f32(b.kv)
+        self.n_mats = f32(b.n_mats)
+        self.top_k = f32(b.top_k)
+        self.expert_frac = f32(b.expert_frac)
+        self.owner = jnp.asarray(np.maximum(b.owner, 0))
+        self.has_owner = jnp.asarray(b.owner >= 0)
+        # BatchOracle folds 1/ici_bw into coll_coef; keep the rate out so
+        # HwParams can swap it per target
+        self.coll_base = f32(b.coll_coef * hw.ici_bw)
+        self.extra_idx = jnp.asarray(b.extra_idx)
+        self.spec_idx = jnp.arange(len(specs))
+        self.n_ops = b.n_ops
+        self.mxu_align = float(hw.mxu_align)
+        self.chips = float(max(1, ctx.chips))
+        self.tokens = float(ctx.tokens)
+        self.causal = ctx.mode in ("train", "prefill")
+        self.seq = float(ctx.seq_ctx if window <= 0
+                         else min(ctx.seq_ctx, window))
+        if len(b.extra_idx):
+            q = b.extra_idx
+            self.extra_hd = f32(b.hd[q])
+            self.extra_prunable = jnp.asarray(b.prune_dim[q] > 0)
+            self.extra_cache_bytes = f32(
+                ctx.tokens * self.seq * 2 * b.kv_cache[q] * b.hd[q]
+                * (ctx.cache_bits / 8.0))
+
+    def _pad(self, x):
+        a = self.mxu_align
+        return jnp.ceil(jnp.maximum(x, 1.0) / a) * a
+
+    def unit_times(self, keep, wb, ab, hwp: Optional[HwParams] = None):
+        """(K, L) per-unit and (K, E) attention-extra times — the same
+        terms as ``BatchOracle.__call__``, traceable."""
+        hwp = self.hwp if hwp is None else hwp
+        T, chips = self.tokens, self.chips
+        keep = jnp.asarray(keep, jnp.float32)
+        wb = jnp.asarray(wb, jnp.float32)
+        ab = jnp.asarray(ab, jnp.float32)
+
+        keep_frac = jnp.where(self.prune_dim > 0,
+                              keep / jnp.maximum(self.prune_dim, 1.0), 1.0)
+        in_frac = jnp.where(self.has_owner, keep_frac[:, self.owner], 1.0)
+        wbpe = jnp.where(wb >= 9, 2.0, jnp.where(wb >= 5, 1.0, 0.5))
+        abpe = jnp.where(ab <= 8, 1.0, 2.0)
+        peak = jnp.where((wb <= 8) & (ab <= 8), hwp.peak_int8,
+                         hwp.peak_bf16)
+
+        k_dim = jnp.where(
+            self.is_conv,
+            (self.weight_elems / jnp.maximum(1.0, self.out_dim)) * in_frac,
+            self.in_dim * in_frac)
+        n_dim = jnp.where(
+            self.is_qkv,
+            keep_frac * (self.out_dim - 2 * self.kv * self.hd)
+            + 2 * self.kv * self.hd,
+            jnp.where(self.prunable, self.out_dim * keep_frac,
+                      self.out_dim))
+        k_pad, n_pad = self._pad(k_dim), self._pad(n_dim)
+
+        m_rows = jnp.where(self.is_conv, T * self.px, T)
+        flops = 2.0 * m_rows * k_pad * n_pad * jnp.where(
+            self.is_conv, 1.0,
+            self.n_mats * jnp.where(self.is_moe, self.top_k, 1.0))
+        w_bytes = (self.weight_elems * keep_frac * in_frac
+                   * self.expert_frac * wbpe)
+        a_bytes = m_rows * k_dim * abpe + m_rows * n_dim * 2.0
+
+        compute = flops / (peak * chips)
+        memory = (w_bytes + a_bytes) / (hwp.hbm_bw * chips)
+        compute = jnp.where(self.is_embed, 0.0, compute)
+        memory = jnp.where(self.is_embed,
+                           T * self.out_dim * wbpe / (hwp.hbm_bw * chips),
+                           memory)
+        coll = self.coll_base / hwp.ici_bw * n_dim
+        unit_time = jnp.maximum(compute, memory) + coll
+
+        if len(self.extra_idx):
+            keep_heads = jnp.where(self.extra_prunable,
+                                   keep[:, self.extra_idx], 0.0)
+            eflops = 4.0 * T * self.seq * self.extra_hd * keep_heads
+            if self.causal:
+                eflops = eflops * 0.5
+            extra = jnp.maximum(
+                eflops / (hwp.peak_bf16 * chips),
+                self.extra_cache_bytes / (hwp.hbm_bw * chips))
+        else:
+            extra = jnp.zeros((keep.shape[0], 0), jnp.float32)
+        return unit_time, extra
+
+    def totals(self, unit_time, extra_time,
+               hwp: Optional[HwParams] = None):
+        hwp = self.hwp if hwp is None else hwp
+        return (unit_time.sum(axis=1) + extra_time.sum(axis=1)
+                + self.n_ops * hwp.op_overhead)
+
+    def decided_before(self, unit_time, extra_time, t):
+        """Per-policy latency of units with spec index < t (traced t) —
+        the in-scan form of ``BatchedPolicyLatency.decided_before``."""
+        out = (unit_time * (self.spec_idx < t)).sum(axis=1)
+        if len(self.extra_idx):
+            out = out + (extra_time * (self.extra_idx < t)).sum(axis=1)
+        return out
+
+
+_jax_oracle_cache: dict = {}
+
+
+def get_jax_oracle(specs: Sequence[LayerSpec], hw: HardwareTarget,
+                   ctx: LatencyContext, window: int = 0) -> JaxBatchOracle:
+    """FIFO-evicting cache, same keying rules as ``get_batch_oracle``."""
+    return fifo_cached(
+        _jax_oracle_cache, _ORACLE_CACHE_MAX, (id(specs), hw, ctx, window),
+        lambda o: o.specs is specs,
+        lambda: JaxBatchOracle(specs, hw, ctx, window))
 
 
 # ===========================================================================

@@ -12,6 +12,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import constraints
@@ -20,6 +21,11 @@ from repro.core.spec import LayerCMP, LayerSpec, effective_bits
 
 T_MIX = 0.5
 T_INT8 = 0.2
+
+
+def n_actions(methods: str) -> int:
+    """Action-vector length per method set (paper: r_p / r_w,r_a / all 3)."""
+    return {"p": 1, "q": 2, "pq": 3}[methods]
 
 
 def d_inverse(r: float, v: int) -> int:
@@ -70,6 +76,63 @@ def map_actions(spec: LayerSpec, actions: Sequence[float],
     return constraints.legalize(spec, cmp)
 
 
+def action_columns(methods: str) -> tuple[int, int, int]:
+    """(prune, w-quant, a-quant) column indices into the action vector.
+    Dead columns point at index 0 and are masked off downstream (the
+    fused rollout carries do_p/do_q flags) — this keeps the traced step
+    function method-agnostic, so one compiled form serves p/q/pq and
+    mixed-method populations vmap together."""
+    if methods == "p":
+        return (0, 0, 0)
+    if methods == "q":
+        return (0, 0, 1)
+    if methods == "pq":
+        return (0, 1, 2)
+    raise ValueError(methods)
+
+
+def map_actions_batch(actions, *, prune_dim, granularity, prunable,
+                      quantizable, mix_ok, ip=0, iw=1, ia=2):
+    """Vectorized ``map_actions`` + ``legalize`` over K action rows for
+    ONE spec: (K, A) actions -> (keep, w_bits, a_bits) arrays of
+    *effective* bits (the ``PolicyBatch`` form).
+
+    The spec parameters are scalars (or 0-d arrays — the fused rollout
+    gathers them from ``constraints.legal_tables`` at a traced index);
+    ``ip``/``iw``/``ia`` are the action columns per ``action_columns``.
+    Matches the scalar path element-for-element: Eq. 4 inverse mapping,
+    Eq. 8 thresholds, then the hardware legalization (granularity
+    rounding, MIX->INT8 fallback, non-quantizable->FP32).
+    """
+    actions = jnp.asarray(actions, jnp.float32)
+    a_p, a_w, a_a = actions[..., ip], actions[..., iw], actions[..., ia]
+
+    # --- pruning: d_inverse(a_p, prune_dim), rounded to the granularity
+    raw = jnp.floor((1.0 - a_p) * prune_dim) + 1.0
+    keep = jnp.minimum(raw, prune_dim)
+    keep = constraints.round_keep_arrays(keep, granularity, prune_dim)
+    keep = jnp.where(prunable, keep, prune_dim)
+
+    # --- quantization: threshold mode selection + Eq. 4 on mix bits
+    hi = jnp.maximum(a_w, a_a)
+    is_mix = hi > T_MIX
+    is_int8 = ~is_mix & (hi > T_INT8)
+    r_w = jnp.clip((a_w - T_MIX) / (1.0 - T_MIX), 0.0, 1.0)
+    r_a = jnp.clip((a_a - T_MIX) / (1.0 - T_MIX), 0.0, 1.0)
+    mix_w = jnp.minimum(jnp.floor((1.0 - r_w) * MAX_MIX_BITS) + 1.0,
+                        float(MAX_MIX_BITS))
+    mix_a = jnp.minimum(jnp.floor((1.0 - r_a) * MAX_MIX_BITS) + 1.0,
+                        float(MAX_MIX_BITS))
+    # MIX on a spec that cannot pack int4 falls back to INT8 (legalize)
+    is_int8 = is_int8 | (is_mix & ~mix_ok)
+    is_mix = is_mix & mix_ok
+    wb = jnp.where(is_mix, mix_w, jnp.where(is_int8, 8.0, 32.0))
+    ab = jnp.where(is_mix, mix_a, jnp.where(is_int8, 8.0, 32.0))
+    wb = jnp.where(quantizable, wb, 32.0)
+    ab = jnp.where(quantizable, ab, 32.0)
+    return keep, wb, ab
+
+
 @dataclass
 class Policy:
     """A complete compression policy for a model (one CMP per LayerSpec)."""
@@ -96,8 +159,7 @@ class Policy:
             acc += s.flops_per_token / 2.0 * f_out * c.w_bits * c.a_bits
         return acc
 
-    def n_actions(self, methods: str) -> int:
-        return {"p": 1, "q": 2, "pq": 3}[methods]
+    n_actions = staticmethod(n_actions)   # back-compat alias
 
 
 @dataclass
@@ -114,6 +176,30 @@ class PolicyBatch:
 
     def __len__(self) -> int:
         return self.keep.shape[0]
+
+
+def policies_from_batch(specs: Sequence[LayerSpec],
+                        batch: PolicyBatch) -> List[Policy]:
+    """Inverse of ``stack_policies``. Effective bits map back to modes
+    uniquely: (32,32) -> FP32, (8,8) -> INT8, anything else is MIX
+    (mix bits are capped at ``MAX_MIX_BITS`` < 8 by Eq. 8)."""
+    out = []
+    for k in range(len(batch)):
+        cmps = []
+        for i in range(len(specs)):
+            w = int(round(float(batch.w_bits[k, i])))
+            a = int(round(float(batch.a_bits[k, i])))
+            keep = int(round(float(batch.keep[k, i])))
+            if w >= 32 and a >= 32:
+                cmps.append(LayerCMP(keep=keep))
+            elif w == 8 and a == 8:
+                cmps.append(LayerCMP(keep=keep, mode="INT8", w_bits=8,
+                                     a_bits=8))
+            else:
+                cmps.append(LayerCMP(keep=keep, mode="MIX", w_bits=w,
+                                     a_bits=a))
+        out.append(Policy(cmps))
+    return out
 
 
 def stack_policies(specs: Sequence[LayerSpec],

@@ -4,22 +4,55 @@ prediction, hardware-oracle validation, and DDPG optimization.
 Three agents (paper §Proposed Agents) share this loop and differ only in
 ``methods``:  "p" (pruning), "q" (quantization), "pq" (joint).
 
-How the episode engine works
+How the episode engines work
 ----------------------------
-``CompressionSearch.run_episode`` is the scalar reference path: walk the
-actionable units in order, build the agent state (which probes the
-analytic latency oracle under the partial policy), act, map the
-continuous action to a legal CMP, then validate the finished policy
-(one jitted accuracy eval + one oracle call) and push the transitions
-with the shared episode reward.
+Three engines share the per-episode semantics (sigma decay schedule,
+warmup flags, shared-episode-reward transition scheme, hardware
+legality) and differ only in how much of an episode batch runs per
+host dispatch:
 
-``BatchedCompressionSearch`` runs K episodes as one batched rollout
-with identical per-episode semantics (each episode keeps its own sigma
-from the decay schedule, its own warmup flag, and the shared-episode-
-reward transition scheme): ``build_state_batch`` + one vectorized
-oracle call per step for the states, ``DDPGAgent.act_batch`` for the
-actions, one ``jit(vmap(accuracy))`` + one batched oracle call for
-validation, and a single bulk ring write for the K*T transitions.
+* ``CompressionSearch.run_episode`` — the scalar reference path: walk
+  the actionable units in order, build the agent state (which probes
+  the analytic latency oracle under the partial policy), act, map the
+  continuous action to a legal CMP, then validate the finished policy
+  (one jitted accuracy eval + one oracle call) and push the transitions
+  with the shared episode reward.
+
+* ``BatchedCompressionSearch`` — K episodes per rollout, still L host
+  steps: ``build_state_batch`` + one vectorized numpy oracle call per
+  layer step, ``DDPGAgent.act_batch`` (host numpy actor), a Python
+  ``map_actions`` loop over the K episodes, then one fused
+  cspec+accuracy jit call and a single bulk ring write.
+
+* ``FusedCompressionSearch`` — the whole K-episode rollout is ONE
+  ``jit(lax.scan)`` over the layer steps: a traceable ``JaxBatchOracle``
+  builds the latency features, ``agent_act_batch`` runs the actor (with
+  in-scan PRNG for warmup/sigma exploration), ``map_actions_batch``
+  projects actions to legal CMPs as array ops, and the (K, L) policy
+  arrays live in the scan carry. Validation and learning then reuse the
+  fused paths (``accuracy_policy_batch`` + ``update_chunk``).
+
+Cost per episode batch (K episodes over L actionable units,
+post-compile; u = fused update-chunk dispatches):
+
+  ========  ====================  ===========================
+  engine    host environment      jit dispatches
+            steps per batch       per batch
+  ========  ====================  ===========================
+  scalar    K * L                 2K + u   (accuracy + ring
+                                  write per episode)
+  batched   L                     2 + u    (fused validation
+                                  + one bulk ring write)
+  fused     0                     3 + u    (<= 4 total)
+  ========  ====================  ===========================
+
+A "host environment step" is one oracle probe + state build + actor
+forward + action->CMP mapping round-trip on the host; the fused
+engine's three dispatches are rollout, validation, and the replay ring
+write (its ``dispatch_log`` records them so benchmarks can assert the
+count never regresses). The numpy engines stay as the parity
+references — ``tests/test_fused.py`` property-tests the fused rollout
+against ``BatchedCompressionSearch`` step for step.
 
 Where the learning happens (PR 2: the functional agent core)
 -----------------------------------------------------------
@@ -39,7 +72,12 @@ update dispatches with one ``jit(vmap(update_chunk))`` over the stacked
 ``AgentState``/replay pytrees. Members with different native action
 dimensionalities share one population by padding ``action_dim`` to the
 maximum (``map_actions`` consumes a prefix of the action vector, so
-trailing entries are inert for single-method agents).
+trailing entries are inert for single-method agents). With
+``fuse_rollouts=True`` and ``FusedCompressionSearch`` members that
+share a step list (same methods — e.g. one member per hardware target,
+whose rate parameters enter the traced oracle as a vmappable
+``HwParams`` pytree), the P rollout dispatches also collapse into one
+``jit(vmap(rollout))``.
 
 Semantic notes, both at batch granularity: critic/actor updates for the
 K episodes of a batch run after the whole batch (same total update
@@ -54,21 +92,28 @@ from __future__ import annotations
 
 import copy
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from typing import List, NamedTuple, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ddpg import (DDPGAgent, DDPGConfig, population_update_chunk,
-                             tree_index, tree_stack)
+from repro.core.constraints import legal_tables
+from repro.core.ddpg import (DDPGAgent, DDPGConfig, agent_act_batch,
+                             population_update_chunk, tree_index, tree_stack)
 from repro.core.latency import (V5E, HardwareTarget, LatencyContext,
-                                policy_latency, policy_latency_batch)
-from repro.core.policy import Policy, map_actions, stack_policies
+                                get_jax_oracle, policy_latency,
+                                policy_latency_batch)
+from repro.core.policy import (Policy, PolicyBatch, action_columns,
+                               map_actions, map_actions_batch, n_actions,
+                               policies_from_batch, stack_policies)
 from repro.core.replay import DeviceReplay
-from repro.core.reward import RewardConfig, compute_reward
+from repro.core.reward import RewardConfig, compute_reward, \
+    compute_reward_batch
 from repro.core.sensitivity import SensitivityResult, run_sensitivity
 from repro.core.spec import effective_bits
-from repro.core.state import build_state, build_state_batch, state_dim
+from repro.core.state import (StateTables, build_state, build_state_batch,
+                              fused_state_block, state_dim)
 
 
 @dataclass(frozen=True)
@@ -76,7 +121,7 @@ class SearchConfig:
     methods: str = "pq"                # p | q | pq
     episodes: int = 120
     reward: RewardConfig = field(default_factory=RewardConfig)
-    ddpg: DDPGConfig = None            # filled in __post_init__ of the search
+    ddpg: Optional[DDPGConfig] = None  # None -> sized to the method set
     seed: int = 0
     window: int = 0                    # attention window for the oracle
     track_bops: bool = True
@@ -133,7 +178,7 @@ class CompressionSearch:
         self.hw = hw
         self.ctx = ctx
         self.val_batch = val_batch
-        native = Policy([]).n_actions(search_cfg.methods)
+        native = n_actions(search_cfg.methods)
         ddpg_cfg = search_cfg.ddpg or DDPGConfig(
             state_dim=state_dim(native), action_dim=native)
         # a provided action_dim larger than the method's native one pads
@@ -281,14 +326,22 @@ class BatchedCompressionSearch(CompressionSearch):
         self.batch_size = max(1, batch_size)
 
     # ------------------------------------------------------------------
-    def run_episode_batch(self, first_episode: int,
-                          k: int) -> List[EpisodeRecord]:
-        cfg = self.cfg
-        eps = list(range(first_episode, first_episode + k))
+    def _batch_schedule(self, first_episode: int, k: int):
+        """(warmup mask, sigma) per episode row — THE one place the
+        batch's exploration schedule is derived (rollout and
+        finish/record paths must agree on it)."""
+        eps = range(first_episode, first_episode + k)
         warmup = np.asarray(
             [e < self.agent.cfg.warmup_episodes for e in eps])
         sigmas = np.asarray([self.agent.sigma_at(e) for e in eps],
                             np.float32)
+        return warmup, sigmas
+
+    def run_episode_batch(self, first_episode: int,
+                          k: int) -> List[EpisodeRecord]:
+        cfg = self.cfg
+        eps = list(range(first_episode, first_episode + k))
+        warmup, sigmas = self._batch_schedule(first_episode, k)
         partials = [copy.deepcopy(self.ref_policy) for _ in eps]
         # (K, L) policy arrays, updated in place as units are decided
         pb = stack_policies(self.specs, partials)
@@ -325,11 +378,25 @@ class BatchedCompressionSearch(CompressionSearch):
         rewards = np.asarray([
             compute_reward(cfg.reward, float(accs[j]), float(lats[j]),
                            self.ref_lat.total_s) for j in range(k)])
+        return self._push_and_record(
+            eps, warmup, sigmas, partials, np.stack(step_states),
+            np.stack(step_actions), accs, lats, rewards)
 
-        # --- transitions: (T, K, ·) -> per-episode chains, one bulk push
-        T = len(self.steps)
-        states = np.stack(step_states)            # (T, K, state_dim)
-        actions = np.stack(step_actions)          # (T, K, a_dim)
+    def _log_dispatch(self, label: str):
+        """Hook for engines that account their jit dispatches (the
+        fused engine's ``dispatch_log``); no-op here."""
+
+    def _push_and_record(self, eps, warmup, sigmas, pols, states,
+                         actions, accs, lats,
+                         rewards) -> List[EpisodeRecord]:
+        """The engines' shared batch tail — THE definition of the
+        shared-episode-reward transition scheme: observe the (T, K, ·)
+        states, push per-episode chains as one bulk ring write
+        (reward repeated along each chain, done on the last step),
+        queue the live episodes' update budget, and build the records.
+        """
+        cfg = self.cfg
+        T, k = len(self.steps), len(eps)
         self.agent.observe_states(states.reshape(T * k, -1))
         nxt = np.concatenate([states[1:], states[-1:]])
         done = np.zeros((T, k), np.float32)
@@ -339,21 +406,21 @@ class BatchedCompressionSearch(CompressionSearch):
             order(states), order(actions),
             np.repeat(rewards, T).astype(np.float32),
             order(nxt), order(done))
+        self._log_dispatch("push")
         n_live = int((~warmup).sum())
         self._queue_updates(self.agent.cfg.updates_per_episode * n_live)
 
         records = []
         for j, e in enumerate(eps):
-            pol = partials[j]
             ratio = float(lats[j]) / (cfg.reward.target_ratio *
                                       self.ref_lat.total_s)
             records.append(EpisodeRecord(
                 episode=e, reward=float(rewards[j]),
                 accuracy=float(accs[j]), latency_s=float(lats[j]),
                 latency_ratio=ratio,
-                macs_frac=pol.macs_fraction(self.specs),
-                bops=pol.bops(self.specs) if cfg.track_bops else 0.0,
-                sigma=float(sigmas[j]), policy=pol))
+                macs_frac=pols[j].macs_fraction(self.specs),
+                bops=pols[j].bops(self.specs) if cfg.track_bops else 0.0,
+                sigma=float(sigmas[j]), policy=pols[j]))
         return records
 
     def _chunk_size(self) -> int:
@@ -362,6 +429,191 @@ class BatchedCompressionSearch(CompressionSearch):
     def _run_chunk(self, first_episode: int,
                    k: int) -> List[EpisodeRecord]:
         return self.run_episode_batch(first_episode, k)
+
+
+# ===========================================================================
+# Fused engine: the rollout environment as one jit(lax.scan)
+# ===========================================================================
+
+class MethodCols(NamedTuple):
+    """Which action columns feed pruning/quantization, and whether each
+    method is live — as traced values, so the rollout step function is
+    method-agnostic (one compiled form serves p/q/pq and the columns
+    vmap across a population)."""
+    ip: jnp.ndarray            # () i32  prune-ratio action column
+    iw: jnp.ndarray            # () i32  weight-bits action column
+    ia: jnp.ndarray            # () i32  act-bits action column
+    do_p: jnp.ndarray          # () bool method prunes
+    do_q: jnp.ndarray          # () bool method quantizes
+
+
+def method_cols(methods: str) -> MethodCols:
+    ip, iw, ia = action_columns(methods)
+    return MethodCols(
+        ip=jnp.asarray(ip, jnp.int32), iw=jnp.asarray(iw, jnp.int32),
+        ia=jnp.asarray(ia, jnp.int32),
+        do_p=jnp.asarray("p" in methods), do_q=jnp.asarray("q" in methods))
+
+
+def make_rollout_fn(cfg: DDPGConfig, oracle, legal, static_tab, spec_steps):
+    """Build the pure rollout function the fused engine jits (and the
+    population engine ``jit(vmap)``s).
+
+    Closure constants: the agent config, the traceable oracle (specs/
+    context tables; hardware rates stay in the ``hwp`` argument), the
+    legality tables, the (T, S) static feature rows, and the (T,) spec
+    index per step. Everything hardware- or member-specific is an
+    argument so one traced function serves a vmapped stack of members.
+
+    Returns ``rollout(st, keep0, wb0, ab0, sigmas, warmup, hwp, shares,
+    ref_total, cols, keys) -> (keep, wb, ab, states, actions, lats)``
+    with ``states``/``actions`` stacked (T, K, ·) in step order and
+    ``lats`` the final policies' oracle latency — the whole episode
+    environment in one dispatch.
+    """
+    pd = jnp.asarray(legal.prune_dim)
+    gran = jnp.asarray(legal.granularity)
+    prunable = jnp.asarray(legal.prunable)
+    quantizable = jnp.asarray(legal.quantizable)
+    mix_ok = jnp.asarray(legal.mix_ok)
+    static_tab = jnp.asarray(static_tab)
+    spec_steps = jnp.asarray(spec_steps)
+
+    def rollout(st, keep0, wb0, ab0, sigmas, warmup, hwp, shares,
+                ref_total, cols, keys):
+        K = sigmas.shape[0]
+        L = keep0.shape[-1]
+        init = (jnp.broadcast_to(keep0, (K, L)),
+                jnp.broadcast_to(wb0, (K, L)),
+                jnp.broadcast_to(ab0, (K, L)),
+                jnp.zeros((K, cfg.action_dim), jnp.float32))
+
+        def step(carry, x):
+            keep, wb, ab, prev_a = carry
+            t, static_row, share_row, k = x
+            unit_t, extra_t = oracle.unit_times(keep, wb, ab, hwp)
+            decided = oracle.decided_before(unit_t, extra_t, t) / ref_total
+            S = fused_state_block(static_row, share_row, decided, prev_a)
+            A = agent_act_batch(cfg, st, S, k, sigmas, warmup)
+            new_keep, new_wb, new_ab = map_actions_batch(
+                A, prune_dim=pd[t], granularity=gran[t],
+                prunable=prunable[t], quantizable=quantizable[t],
+                mix_ok=mix_ok[t], ip=cols.ip, iw=cols.iw, ia=cols.ia)
+            # single-method agents preserve the other method's reference
+            # parameters (same rule as the host engines)
+            keep = keep.at[:, t].set(
+                jnp.where(cols.do_p, new_keep, keep[:, t]))
+            wb = wb.at[:, t].set(jnp.where(cols.do_q, new_wb, wb[:, t]))
+            ab = ab.at[:, t].set(jnp.where(cols.do_q, new_ab, ab[:, t]))
+            return (keep, wb, ab, A), (S, A)
+
+        xs = (spec_steps, static_tab, shares, keys)
+        (keep, wb, ab, _), (states, actions) = jax.lax.scan(step, init, xs)
+        unit_t, extra_t = oracle.unit_times(keep, wb, ab, hwp)
+        lats = oracle.totals(unit_t, extra_t, hwp)
+        return keep, wb, ab, states, actions, lats
+
+    return rollout
+
+
+class FusedCompressionSearch(BatchedCompressionSearch):
+    """K episodes per rollout, the rollout itself ONE jit dispatch.
+
+    Same per-episode semantics as the numpy engines; the environment
+    (oracle features, actor, action->CMP projection, policy carry) runs
+    as a ``lax.scan`` over the layer steps, so an episode batch costs
+    rollout + validation + ring write + update chunk — at most 4 jit
+    executions — instead of ~2L host dispatches. ``dispatch_log``
+    records each fused-path dispatch ("rollout"/"validate"/"push"/
+    "update"); the weekly benchmark cross-checks it against measured
+    invocations of the compiled entry points
+    (``benchmarks.search_setup.fused_dispatch_probe``). In a fused
+    population, dispatches shared across members (rollout, update)
+    appear in every member's log.
+
+    Exploration randomness comes from a dedicated jax PRNG stream
+    (``seed``-derived, separate from the agent's update-sampling key);
+    ``_last_batch_key`` exposes the per-batch key so parity tests can
+    replay the exact draws through the numpy reference engine.
+    """
+
+    def __init__(self, cmodel, val_batch, search_cfg: SearchConfig,
+                 ctx: LatencyContext, hw: HardwareTarget = V5E,
+                 sens: Optional[SensitivityResult] = None,
+                 calib_batch=None, batch_size: int = 8):
+        super().__init__(cmodel, val_batch, search_cfg, ctx, hw=hw,
+                         sens=sens, calib_batch=calib_batch,
+                         batch_size=batch_size)
+        self.oracle = get_jax_oracle(self.specs, hw, ctx, search_cfg.window)
+        self.tables = StateTables(self.specs, self.steps, self.sens,
+                                  self.ref_lat)
+        ref_pb = stack_policies(self.specs, [self.ref_policy])
+        self._ref_rows = tuple(
+            jnp.asarray(x[0], jnp.float32)
+            for x in (ref_pb.keep, ref_pb.w_bits, ref_pb.a_bits))
+        self._cols = method_cols(search_cfg.methods)
+        self._rollout_fn = make_rollout_fn(
+            self.agent.cfg, self.oracle, legal_tables(self.specs),
+            self.tables.static, self.tables.spec_idx)
+        self._rollout = jax.jit(self._rollout_fn)
+        self._rollout_key = jax.random.PRNGKey(search_cfg.seed + 0x5EED)
+        self._last_batch_key = None
+        self.dispatch_log: List[str] = []
+
+    # ------------------------------------------------------------------
+    def _rollout_args(self, first_episode: int, k: int) -> tuple:
+        """Per-batch argument tuple for ``_rollout_fn`` (every element
+        stackable across population members); advances the rollout PRNG
+        stream."""
+        warmup, sigmas = self._batch_schedule(first_episode, k)
+        self._rollout_key, bk = jax.random.split(self._rollout_key)
+        self._last_batch_key = bk
+        keys = jax.random.split(bk, len(self.steps))
+        keep0, wb0, ab0 = self._ref_rows
+        return (self.agent.state_for_dispatch(), keep0, wb0, ab0,
+                jnp.asarray(sigmas), jnp.asarray(warmup), self.oracle.hwp,
+                jnp.asarray(self.tables.shares),
+                jnp.asarray(self.tables.ref_total, jnp.float32),
+                self._cols, keys)
+
+    def _finish_batch(self, first_episode: int, k: int,
+                      out: tuple) -> List[EpisodeRecord]:
+        """Validation, reward, replay write, records — everything after
+        the rollout dispatch. ``out`` is a ``_rollout_fn`` result."""
+        cfg = self.cfg
+        keep, wb, ab, dev_states, dev_actions, lats = out
+        eps = list(range(first_episode, first_episode + k))
+        warmup, sigmas = self._batch_schedule(first_episode, k)
+        pb = PolicyBatch(keep=np.asarray(keep, np.float64),
+                         w_bits=np.asarray(wb, np.float64),
+                         a_bits=np.asarray(ab, np.float64))
+        accs = np.asarray(
+            self.cmodel.accuracy_policy_batch(self.val_batch, pb))
+        self.dispatch_log.append("validate")
+        lats = np.asarray(lats, np.float64)
+        rewards = np.asarray(compute_reward_batch(
+            cfg.reward, accs.astype(np.float32),
+            lats.astype(np.float32), self.ref_lat.total_s), np.float64)
+        return self._push_and_record(
+            eps, warmup, sigmas, policies_from_batch(self.specs, pb),
+            np.asarray(dev_states), np.asarray(dev_actions), accs, lats,
+            rewards)
+
+    def _log_dispatch(self, label: str):
+        self.dispatch_log.append(label)
+
+    def _flush_updates(self):
+        if self._pending_updates > 0 and \
+                len(self.replay) >= self.agent.cfg.batch_size:
+            self.dispatch_log.append("update")
+        super()._flush_updates()
+
+    def run_episode_batch(self, first_episode: int,
+                          k: int) -> List[EpisodeRecord]:
+        args = self._rollout_args(first_episode, k)
+        out = self._rollout(*args)
+        self.dispatch_log.append("rollout")
+        return self._finish_batch(first_episode, k, out)
 
 
 class PopulationSearch:
@@ -380,9 +632,19 @@ class PopulationSearch:
     populations; see the module docstring) and one chunk size. Members
     whose pending budgets diverge (e.g. different warmup positions)
     fall back to per-member fused flushes for that chunk.
+
+    With ``fuse_rollouts=True``, members that are all
+    ``FusedCompressionSearch`` over the same specs/sensitivity/context
+    with the same methods (hence the same step list — the multi-
+    hardware-target scenario, or multiple seeds) additionally share the
+    rollout dispatch: one ``jit(vmap(rollout))`` over the stacked agent
+    states, policy carries, and per-target ``HwParams``/latency-share
+    arguments. Incompatible members silently keep their own (still
+    fused) per-member rollout dispatch.
     """
 
-    def __init__(self, members: Sequence[CompressionSearch]):
+    def __init__(self, members: Sequence[CompressionSearch],
+                 fuse_rollouts: bool = False):
         if not members:
             raise ValueError("PopulationSearch needs at least one member")
         self.members = list(members)
@@ -394,6 +656,43 @@ class PopulationSearch:
                     f"action_dim): {m.agent.cfg} != {cfg0}")
         if len({m._chunk_size() for m in self.members}) != 1:
             raise ValueError("population members must share a chunk size")
+        self.fuse_rollouts = fuse_rollouts
+        self._pop_rollout = None
+        self._fusable = None
+
+    def _rollouts_fusable(self) -> bool:
+        """One vmapped rollout needs one traced step function: same spec
+        list (identity — the oracle/legal/static tables bake into the
+        trace), same sensitivity table, same context/window/methods (the
+        step lists must coincide), same MXU alignment. Hardware rates
+        and latency shares are arguments, so targets may differ."""
+        if self._fusable is None:
+            ms = self.members
+            m0 = ms[0]
+            self._fusable = all(isinstance(m, FusedCompressionSearch)
+                                for m in ms) and \
+                all(m.specs is m0.specs and m.sens is m0.sens
+                    and m.ctx == m0.ctx
+                    and m.cfg.window == m0.cfg.window
+                    and m.cfg.methods == m0.cfg.methods
+                    and m.hw.mxu_align == m0.hw.mxu_align
+                    for m in ms[1:])
+        return self._fusable
+
+    def _run_fused_chunk(self, first_episode: int,
+                         k: int) -> List[List[EpisodeRecord]]:
+        """All members' rollouts as ONE vmapped dispatch, then the
+        per-member validation/replay/record tail."""
+        args = [m._rollout_args(first_episode, k) for m in self.members]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *args)
+        if self._pop_rollout is None:
+            self._pop_rollout = jax.jit(
+                jax.vmap(self.members[0]._rollout_fn))
+        outs = self._pop_rollout(*stacked)
+        for m in self.members:     # ONE shared dispatch, logged on each
+            m.dispatch_log.append("rollout")
+        return [m._finish_batch(first_episode, k, tree_index(outs, i))
+                for i, m in enumerate(self.members)]
 
     def run(self, episodes: Optional[int] = None,
             verbose: bool = False) -> List[SearchResult]:
@@ -409,8 +708,12 @@ class PopulationSearch:
             e = 0
             while e < n:
                 k = min(self.members[0]._chunk_size(), n - e)
-                for i, m in enumerate(self.members):
-                    for rec in m._run_chunk(e, k):
+                if self.fuse_rollouts and self._rollouts_fusable():
+                    chunks = self._run_fused_chunk(e, k)
+                else:
+                    chunks = [m._run_chunk(e, k) for m in self.members]
+                for i, recs in enumerate(chunks):
+                    for rec in recs:
                         histories[i].append(rec)
                         if bests[i] is None or rec.reward > bests[i].reward:
                             bests[i] = rec
@@ -446,6 +749,8 @@ class PopulationSearch:
             for i, m in enumerate(self.members):
                 m.agent.adopt_state(tree_index(new_states, i))
                 m._pending_updates = 0
+                if isinstance(m, FusedCompressionSearch):
+                    m.dispatch_log.append("update")   # shared dispatch
         else:
             for m in self.members:
                 m._flush_updates()

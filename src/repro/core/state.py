@@ -9,15 +9,22 @@ features, computed against the hardware latency oracle instead of FLOPs).
 ``action_dim``, which may be padded above the method's native count so
 mixed-method members of a ``PopulationSearch`` share one vmappable shape
 (trailing entries stay zero/inert for single-method agents).
+
+Three builders share the feature definitions: ``build_state`` (scalar),
+``build_state_batch`` (K episodes, numpy), and ``StateTables`` +
+``fused_state_block`` (the fused rollout scan: per-step constants
+precomputed from the same ``_static_features`` cache, the
+decided-latency share computed in-scan from the traceable oracle).
 """
 from __future__ import annotations
 
 from typing import Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.latency import (HardwareTarget, LatencyContext,
-                                PolicyLatency, policy_latency)
+                                PolicyLatency, fifo_cached, policy_latency)
 from repro.core.policy import Policy
 from repro.core.sensitivity import SensitivityResult
 from repro.core.spec import LayerSpec
@@ -78,13 +85,16 @@ _STATIC_CACHE_MAX = 4096               # ~entries for dozens of searches
 
 
 def _static_features(specs, t, sens, ref_lat):
-    key = (id(specs), id(sens), id(ref_lat), t)
-    hit = _static_cache.get(key)
-    if hit is not None and hit[0] is specs and hit[1] is sens \
-            and hit[2] is ref_lat:
-        return hit[3]
-    if len(_static_cache) >= _STATIC_CACHE_MAX:
-        _static_cache.clear()
+    hit = fifo_cached(
+        _static_cache, _STATIC_CACHE_MAX, (id(specs), id(sens),
+                                           id(ref_lat), t),
+        lambda h: h[0] is specs and h[1] is sens and h[2] is ref_lat,
+        lambda: (specs, sens, ref_lat,
+                 _compute_static_features(specs, t, sens, ref_lat)))
+    return hit[3]
+
+
+def _compute_static_features(specs, t, sens, ref_lat):
     s = specs[t]
     total_flops = sum(x.flops_per_token for x in specs) or 1.0
     total_weights = sum(x.weight_elems for x in specs) or 1.0
@@ -102,9 +112,51 @@ def _static_features(specs, t, sens, ref_lat):
                      if _unit_index(u.name, specs) == t) / ref_total
     rest_share = sum(u.time_s for u in ref_lat.units
                      if _unit_index(u.name, specs) >= t) / ref_total
-    val = (static, this_share, rest_share, ref_total)
-    _static_cache[key] = (specs, sens, ref_lat, val)
-    return val
+    return (static, this_share, rest_share, ref_total)
+
+
+class StateTables:
+    """Per-step state-feature constants for the fused rollout scan.
+
+    Everything in ``build_state_batch`` that does not depend on the
+    partial policy, laid out per scan step (one row per actionable
+    unit): the static feature block, the reference-latency shares, and
+    the spec index used for the in-scan decided-latency mask. Values
+    come from the same ``_static_features`` cache the numpy engines
+    read, so the two paths agree bit-for-bit on these features.
+
+    ``this_share``/``rest_share``/``ref_total`` derive from ``ref_lat``
+    and hence from the hardware target — the fused rollout takes them as
+    (vmappable) arguments, while ``static`` is target-independent and
+    bakes into the trace.
+    """
+
+    def __init__(self, specs, steps, sens, ref_lat):
+        rows, this_s, rest_s = [], [], []
+        ref_total = 1.0
+        for t in steps:
+            static, a, b, ref_total = _static_features(specs, t, sens,
+                                                       ref_lat)
+            rows.append(static)
+            this_s.append(a)
+            rest_s.append(b)
+        self.static = np.stack(rows).astype(np.float32)      # (T, S)
+        self.shares = np.stack(                              # (T, 2)
+            [np.asarray(this_s, np.float32),
+             np.asarray(rest_s, np.float32)], axis=1)
+        self.ref_total = float(ref_total)
+        self.spec_idx = np.asarray(steps, np.int32)          # (T,)
+
+
+def fused_state_block(static_row, shares_row, decided, prev_actions):
+    """One scan step's (K, state_dim) block: the traced twin of
+    ``build_state_batch`` given precomputed ``StateTables`` rows and the
+    in-scan decided-latency share."""
+    K = prev_actions.shape[0]
+    static = jnp.broadcast_to(static_row, (K,) + static_row.shape)
+    tail = jnp.stack([jnp.broadcast_to(shares_row[0], (K,)), decided,
+                      jnp.broadcast_to(shares_row[1], (K,))], axis=1)
+    return jnp.concatenate([static, prev_actions, tail], axis=1)
 
 
 _name_cache: dict = {}
