@@ -1,0 +1,80 @@
+"""Benchmark regression gate: fail CI when episodes/sec drops vs the
+committed baseline.
+
+``python -m benchmarks.regression_gate`` compares the rows of a freshly
+generated ``artifacts/bench_engine.json`` (``benchmarks.search_setup``)
+against the committed ``artifacts/bench_baseline.json`` and exits
+nonzero if any matched row's throughput metric regressed by more than
+``--tol`` (default 20%). Rows are matched on their identity fields
+(table/engine/members/batch_size/updates_per_episode); rows present in
+only one file are skipped — adding a new engine never breaks the gate,
+and the baseline only tightens when it is re-committed from a fresh
+measurement on the reference box.
+
+The weekly CI job runs this right after the benchmark. Shared runners
+are noisy; the 20% tolerance plus best-of-N timing in the benchmark
+keeps the gate quiet on contention while still catching real
+dispatch-count or compile-path regressions (which cost 2x+, not 20%).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+KEY_FIELDS = ("table", "engine", "members", "batch_size",
+              "updates_per_episode")
+METRICS = ("eps_per_s", "independent_eps_per_s", "population_eps_per_s")
+
+
+def row_key(row: dict) -> tuple:
+    return tuple(json.dumps(row.get(f)) for f in KEY_FIELDS)
+
+
+def check(current: list, baseline: list, tol: float):
+    """(checked metric count, failure strings)."""
+    base = {row_key(r): r for r in baseline}
+    checked, failures = 0, []
+    for row in current:
+        b = base.get(row_key(row))
+        if b is None:
+            continue
+        for m in METRICS:
+            if m not in row or m not in b or not b[m] > 0:
+                continue
+            checked += 1
+            if row[m] < (1.0 - tol) * b[m]:
+                ident = {f: row.get(f) for f in KEY_FIELDS
+                         if row.get(f) is not None}
+                failures.append(
+                    f"{ident}: {m} {row[m]:.2f} < "
+                    f"{(1.0 - tol) * b[m]:.2f} "
+                    f"(baseline {b[m]:.2f}, tol {tol:.0%})")
+    return checked, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="artifacts/bench_engine.json")
+    ap.add_argument("--baseline", default="artifacts/bench_baseline.json")
+    ap.add_argument("--tol", type=float, default=0.2,
+                    help="allowed fractional regression (default 0.2)")
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    checked, failures = check(current, baseline, args.tol)
+    if not checked:
+        print("regression gate: no comparable rows — baseline stale?",
+              file=sys.stderr)
+        return 2
+    for line in failures:
+        print(f"REGRESSION {line}", file=sys.stderr)
+    print(f"regression gate: {checked} metrics checked, "
+          f"{len(failures)} regressions (tol {args.tol:.0%})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

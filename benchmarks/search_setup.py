@@ -1,10 +1,13 @@
 """Search construction shared by the paper-table benchmarks, plus the
-episode-engine throughput comparisons: scalar vs batched rollouts, and
-independent vs population-shared (vmapped) agent updates.
+episode-engine throughput comparisons: scalar vs batched vs fused vs
+epoch-fused rollouts, and independent vs population-shared (vmapped)
+agent updates.
 
 ``python -m benchmarks.search_setup`` prints episodes/sec for all of
-them and writes the rows to ``artifacts/bench_engine.json`` (uploaded
-weekly by CI so update-path regressions are visible)."""
+them and writes one row per engine to ``artifacts/bench_engine.json``
+(uploaded weekly by CI; ``benchmarks.regression_gate`` fails the job
+when a row regresses >20% vs the committed
+``artifacts/bench_baseline.json``)."""
 from __future__ import annotations
 
 import json
@@ -24,7 +27,10 @@ from repro.core.search import (BatchedCompressionSearch, CompressionSearch,
 from repro.core.sensitivity import run_sensitivity
 
 ENGINES = {"scalar": CompressionSearch, "batched": BatchedCompressionSearch,
-           "fused": FusedCompressionSearch}
+           "fused": FusedCompressionSearch, "epoch": FusedCompressionSearch}
+
+# batches fused into one dispatch by the epoch engine rows
+EPOCH_BATCHES = 4
 
 FULL = os.environ.get("GALEN_BENCH_FULL", "0") == "1"
 
@@ -128,8 +134,8 @@ def _tiny_testbed():
 
 def _tiny_engine(engine, batch_size: int, updates: int,
                  methods: str = "pq", action_dim: int = 0, seed: int = 0):
-    """``engine``: "scalar" | "batched" | "fused" (bools kept for the
-    original scalar/batched call sites)."""
+    """``engine``: "scalar" | "batched" | "fused" | "epoch" (bools kept
+    for the original scalar/batched call sites)."""
     if isinstance(engine, bool):
         engine = "batched" if engine else "scalar"
     cm, batch = _tiny_testbed()
@@ -143,6 +149,9 @@ def _tiny_engine(engine, batch_size: int, updates: int,
     cls = ENGINES[engine]
     if engine == "scalar":
         return cls(cm, batch, scfg, ctx)
+    if engine == "epoch":
+        return cls(cm, batch, scfg, ctx, batch_size=batch_size,
+                   epoch_batches=EPOCH_BATCHES)
     return cls(cm, batch, scfg, ctx, batch_size=batch_size)
 
 
@@ -231,40 +240,159 @@ def assert_fused_dispatch_count(search, first_episode: int,
     return counts
 
 
+@contextmanager
+def epoch_dispatch_probe(search):
+    """Epoch-mode compile-counter hook: counts REAL invocations of the
+    cached epoch executables (by wrapping the compiled callables in the
+    engine's FIFO cache), and plants canaries on EVERY per-batch entry
+    point — the fused rollout jit, the standalone validation jit, the
+    ring-write jit, the update-chunk jit, and the numpy engines' host
+    machinery. An epoch must touch none of them: the whole E-batch
+    epoch is the one compiled program."""
+    import repro.core.ddpg as ddpg_mod
+    import repro.core.replay as replay_mod
+    import repro.core.search as search_mod
+    counts = {"epoch": 0, "rollout": 0, "validate": 0, "push": 0,
+              "update": 0, "host_steps": 0}
+    saved = []
+
+    def wrap(obj, name, key):
+        fn = getattr(obj, name)
+        saved.append((obj, name, name in vars(obj), fn))
+
+        def counting(*a, **kw):
+            counts[key] += 1
+            return fn(*a, **kw)
+
+        setattr(obj, name, counting)
+
+    # the compiled epoch executables live in the engine's FIFO cache as
+    # (params, fn) hits — wrap each fn in place
+    cache_saved = dict(search._epoch_cache)
+
+    def wrap_cache_entry(k, params, fn):
+        def counting(*a, **kw):
+            counts["epoch"] += 1
+            return fn(*a, **kw)
+
+        search._epoch_cache[k] = (params, counting)
+
+    for k, (params, fn) in cache_saved.items():
+        wrap_cache_entry(k, params, fn)
+    # canaries: the per-batch fused path and the numpy host path
+    wrap(search, "_rollout", "rollout")
+    wrap(search.cmodel, "accuracy_policy_batch", "validate")
+    wrap(replay_mod, "_device_push", "push")
+    wrap(ddpg_mod, "_update_chunk_jit", "update")
+    wrap(search.agent, "act_batch", "host_steps")
+    wrap(search_mod, "policy_latency_batch", "host_steps")
+    try:
+        yield counts
+    finally:
+        for obj, name, was_own, fn in reversed(saved):
+            if was_own:
+                setattr(obj, name, fn)
+            else:
+                delattr(obj, name)
+        search._epoch_cache.update(cache_saved)
+
+
+def assert_epoch_dispatch_count(search, first_episode: int,
+                                n_batches: int) -> dict:
+    """One post-compile epoch on the epoch-fused engine must be ONE jit
+    execution total (the ISSUE 4 acceptance bound): the epoch
+    executable once, the per-batch compiled entry points and the host
+    path never. Also checks the engine's ``dispatch_log`` agrees. Runs
+    in the weekly job; a regression fails it."""
+    search.dispatch_log.clear()
+    with epoch_dispatch_probe(search) as counts:
+        search.run_epoch(first_episode, n_batches)
+    assert counts["host_steps"] == 0, \
+        f"per-step host path ran under the epoch engine: {counts}"
+    per_batch = sum(counts[k] for k in ("rollout", "validate", "push",
+                                        "update"))
+    assert per_batch == 0, \
+        f"per-batch compiled entry points ran in an epoch: {counts}"
+    assert counts["epoch"] == 1, \
+        f"epoch made {counts['epoch']} epoch executions " \
+        f"(uncached schedule?): {counts}"
+    assert search.dispatch_log == ["epoch"], search.dispatch_log
+    return counts
+
+
 def engine_comparison(batch_size: int = 8, episodes: int = 32,
-                      updates: int = 0, verbose: bool = True) -> dict:
-    """Episodes/sec, scalar vs batched vs fused, on the tiny LM.
+                      updates: int = 0, verbose: bool = True) -> list:
+    """Episodes/sec on the tiny LM, one row per engine.
 
     ``updates=0`` isolates rollout+validation throughput — where the
-    fused engine's one-dispatch rollout pays off most; with updates
-    enabled every engine dispatches each episode batch's updates as one
-    fused ``update_chunk`` scan (PR 2), so the rollout engines amortize
-    rollout AND learning dispatch.
+    one-dispatch rollout pays off most; with updates enabled every
+    engine dispatches each episode batch's updates as one fused
+    ``update_chunk`` scan (PR 2), so the rollout engines amortize
+    rollout AND learning dispatch. The epoch engine additionally fuses
+    ``EPOCH_BATCHES`` whole batches (rollout+validate+push+update) into
+    one jit execution with a single host readback.
     """
-    scalar = episodes_per_sec(_tiny_engine("scalar", batch_size, updates),
-                              episodes)
-    batched = episodes_per_sec(_tiny_engine("batched", batch_size, updates),
-                               episodes)
-    fused_search = _tiny_engine("fused", batch_size, updates)
-    fused = episodes_per_sec(fused_search, episodes)
-    counts = assert_fused_dispatch_count(
-        fused_search, first_episode=64, batch_size=batch_size)
-    n_disp = sum(counts[k] for k in ("rollout", "validate", "push",
-                                     "update"))
-    out = {"table": "engine", "batch_size": batch_size,
-           "episodes": episodes, "updates_per_episode": updates,
-           "scalar_eps_per_s": round(scalar, 2),
-           "batched_eps_per_s": round(batched, 2),
-           "fused_eps_per_s": round(fused, 2),
-           "speedup": round(batched / scalar, 2),
-           "fused_speedup_vs_batched": round(fused / batched, 2),
-           "fused_dispatches_per_batch": n_disp}
+    import jax
+    names = ("scalar", "batched", "fused", "epoch")
+    searches = {}
+    for name in names:
+        s = _tiny_engine(name, batch_size, updates)
+        # warm the jit caches over two chunks straddling the agent's
+        # warmup boundary; the epoch engine warms a full run so the
+        # timed chunks hit its compiled (warmup-straddling) schedule
+        s.run(episodes=episodes if name == "epoch" else 16)
+        jax.block_until_ready(s.agent.state)
+        searches[name] = s
+    # interleave the best-of-N repeats round-robin across engines so
+    # box-level drift (thermal, contention) hits every engine equally
+    # instead of penalizing whichever is measured last; N=5 because the
+    # engines differ by less than this box's run-to-run spread
+    eps = {n: 0.0 for n in names}
+    for _ in range(5):
+        for name, s in searches.items():
+            t0 = time.perf_counter()
+            s.run(episodes=episodes)
+            # final dispatches are asynchronous — fence them into the
+            # timed region
+            jax.block_until_ready(s.agent.state)
+            eps[name] = max(eps[name],
+                            episodes / (time.perf_counter() - t0))
+    rows = []
+    for name in names:
+        search = searches[name]
+        row = {"table": "engine", "engine": name,
+               "batch_size": batch_size, "episodes": episodes,
+               "updates_per_episode": updates,
+               "eps_per_s": round(eps[name], 2)}
+        if name == "batched":
+            row["speedup_vs_scalar"] = round(eps[name] / eps["scalar"],
+                                             2)
+        elif name == "fused":
+            counts = assert_fused_dispatch_count(
+                search, first_episode=2 * episodes,
+                batch_size=batch_size)
+            row["dispatches_per_batch"] = sum(
+                counts[k] for k in ("rollout", "validate", "push",
+                                    "update"))
+            row["speedup_vs_batched"] = round(eps[name] / eps["batched"],
+                                              2)
+        elif name == "epoch":
+            # first_episode=0 reuses the schedule the timed runs
+            # compiled (run() restarts episode numbering each call)
+            assert_epoch_dispatch_count(search, first_episode=0,
+                                        n_batches=EPOCH_BATCHES)
+            row["epoch_batches"] = EPOCH_BATCHES
+            row["dispatches_per_epoch"] = 1
+            row["speedup_vs_fused"] = round(eps[name] / eps["fused"], 2)
+        rows.append(row)
     if verbose:
         print(f"[engine] K={batch_size} updates={updates}: "
-              f"scalar {scalar:.1f} eps/s, batched {batched:.1f} eps/s, "
-              f"fused {fused:.1f} eps/s ({n_disp} dispatches/batch) "
-              f"-> fused/batched {fused / batched:.2f}x", flush=True)
-    return out
+              + ", ".join(f"{n} {eps[n]:.1f} eps/s"
+                          for n in ("scalar", "batched", "fused",
+                                    "epoch"))
+              + f" -> epoch/fused {eps['epoch'] / eps['fused']:.2f}x",
+              flush=True)
+    return rows
 
 
 def population_comparison(batch_size: int = 8, episodes: int = 32,
@@ -327,9 +455,8 @@ def population_comparison(batch_size: int = 8, episodes: int = 32,
 
 
 def main(out: str = "artifacts/bench_engine.json"):
-    rows = [engine_comparison(updates=0),
-            engine_comparison(updates=8),
-            population_comparison()]
+    rows = (engine_comparison(updates=0) + engine_comparison(updates=8)
+            + [population_comparison()])
     os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
         json.dump(rows, f, indent=1)

@@ -504,6 +504,27 @@ class _BatchedAccuracyMixin:
         self._acc_batch_cache = (batch, fn, self.params)
         return fn
 
+    def accuracy_policy_fn(self, batch: dict):
+        """The pure traced-cspec validator: (K, L) int32 keep/w_bits/
+        a_bits arrays -> (K,) accuracies, un-jitted so callers can
+        inline it into a larger traced program (the epoch-fused engine
+        chains it inside its ``lax.scan`` body).
+
+        ``accuracy_policy_batch`` jits exactly this function; both share
+        one cache keyed on batch AND params identity — swapping in new
+        weights (e.g. after a QAT retrain) must re-trace, since the
+        traced builder bakes params and prune scores in as constants.
+        """
+        cached = getattr(self, "_acc_pb_cache", None)
+        if cached is None or cached[0] is not batch \
+                or cached[3] is not self.params:
+            build = self._make_cspec_builder()
+            fn = jax.vmap(
+                lambda k, w, a: self.accuracy(batch, build(k, w, a)))
+            self._acc_pb_cache = (batch, fn, jax.jit(fn), self.params)
+            cached = self._acc_pb_cache
+        return cached[1]
+
     def accuracy_policy_batch(self, batch: dict,
                               pbatch: "PolicyBatch") -> jnp.ndarray:
         """(K,) accuracies straight from PolicyBatch arrays.
@@ -512,20 +533,10 @@ class _BatchedAccuracyMixin:
         the whole validation (mask building included) is ONE jit call —
         no per-policy host-side cspec construction at all.
         """
-        cached = getattr(self, "_acc_pb_cache", None)
-        # keyed on batch AND params identity — swapping in new weights
-        # (e.g. after a QAT retrain) must re-trace, since the compiled
-        # fn bakes params and prune scores in as constants
-        if cached is None or cached[0] is not batch \
-                or cached[2] is not self.params:
-            build = self._make_cspec_builder()
-            fn = jax.jit(jax.vmap(
-                lambda k, w, a: self.accuracy(batch, build(k, w, a))))
-            self._acc_pb_cache = (batch, fn, self.params)
-            cached = self._acc_pb_cache
-        return cached[1](jnp.asarray(pbatch.keep, jnp.int32),
-                         jnp.asarray(pbatch.w_bits, jnp.int32),
-                         jnp.asarray(pbatch.a_bits, jnp.int32))
+        self.accuracy_policy_fn(batch)        # (re)fill the shared cache
+        return self._acc_pb_cache[2](jnp.asarray(pbatch.keep, jnp.int32),
+                                     jnp.asarray(pbatch.w_bits, jnp.int32),
+                                     jnp.asarray(pbatch.a_bits, jnp.int32))
 
 
 @dataclass

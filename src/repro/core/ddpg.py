@@ -233,6 +233,23 @@ def agent_act_batch(cfg: DDPGConfig, st: AgentState, states, key, sigmas,
     return jnp.where(jnp.asarray(warmup)[:, None], uniform, acted)
 
 
+def observe_states_pure(st: AgentState, states) -> AgentState:
+    """Advance the running-norm stats from an (N, state_dim) block — the
+    traced twin of ``RunningNorm.update`` (same parallel-variance
+    formula, f32), so the epoch scan can move the normalizer at batch
+    boundaries without the host."""
+    x = jnp.asarray(states, jnp.float32)
+    bc = jnp.asarray(x.shape[0], jnp.float32)
+    bm, bv = x.mean(axis=0), x.var(axis=0)
+    delta = bm - st.norm_mean
+    tot = st.norm_count + bc
+    mean = st.norm_mean + delta * bc / tot
+    m_a = st.norm_var * st.norm_count
+    m_b = bv * bc
+    var = (m_a + m_b + delta ** 2 * st.norm_count * bc / tot) / tot
+    return st._replace(norm_count=tot, norm_mean=mean, norm_var=var)
+
+
 def ddpg_step(cfg: DDPGConfig, actor, critic, t_actor, t_critic,
               opt_a, opt_c, batch):
     """One critic + actor + soft-target update on a prepared batch

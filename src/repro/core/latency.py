@@ -24,7 +24,6 @@ over INT8 — the oracle makes the agent discover this, like the paper's
 """
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
 from typing import NamedTuple, Optional, Sequence, Union
@@ -74,8 +73,15 @@ def _act_bytes_per_elem(a_bits: int) -> float:
     return 1.0 if a_bits <= 8 else 2.0
 
 
+def pad_align(x, align, xp=np):
+    """MXU-lane padding: ceil(max(x, 1) / align) * align. One definition
+    for all three oracle forms — scalars and numpy arrays with the
+    default ``xp=np``, traced arrays with ``xp=jnp``."""
+    return xp.ceil(xp.maximum(x, 1.0) / align) * align
+
+
 def _pad(x: float, align: int) -> float:
-    return math.ceil(max(x, 1) / align) * align
+    return float(pad_align(x, align))
 
 
 def _peak(w_bits: int, a_bits: int, hw: HardwareTarget) -> float:
@@ -351,8 +357,7 @@ class BatchOracle:
         self.n_ops = L + len(self.extra_idx)
 
     def _pad(self, x: np.ndarray) -> np.ndarray:
-        a = self.hw.mxu_align
-        return np.ceil(np.maximum(x, 1.0) / a) * a
+        return pad_align(x, self.hw.mxu_align)
 
     def __call__(self, batch: PolicyBatch) -> BatchedPolicyLatency:
         hw, ctx = self.hw, self.ctx
@@ -554,8 +559,7 @@ class JaxBatchOracle:
                 * (ctx.cache_bits / 8.0))
 
     def _pad(self, x):
-        a = self.mxu_align
-        return jnp.ceil(jnp.maximum(x, 1.0) / a) * a
+        return pad_align(x, self.mxu_align, xp=jnp)
 
     def unit_times(self, keep, wb, ab, hwp: Optional[HwParams] = None):
         """(K, L) per-unit and (K, E) attention-extra times — the same

@@ -14,12 +14,54 @@ statically (zero overhead for the uncompressed dry-run).
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
 # On-TPU truth (see DESIGN.md §1): MIX above 6 bits is never better than
 # INT8 (same MXU path, worse packing), mirroring the paper's ARM finding.
 MAX_MIX_BITS = 6
+
+_fq_ops = None          # lazy kernels.ops handle (kernels import late —
+                        # the kernel package must not load at model-import)
+
+
+@jax.custom_jvp
+def _fused_fake_quant_ste(xf: jnp.ndarray, bits) -> jnp.ndarray:
+    """Kernel-backed quant-dequant with a straight-through JVP —
+    ``pallas_call`` has no differentiation rule, so the identity
+    tangent (exactly the STE) is attached here and ``jax.grad`` never
+    traces into the kernel."""
+    global _fq_ops
+    if _fq_ops is None:
+        from repro.kernels import ops
+        _fq_ops = ops
+    return _fq_ops.fused_fake_quant(xf, bits)
+
+
+@_fused_fake_quant_ste.defjvp
+def _fused_fake_quant_ste_jvp(primals, tangents):
+    return _fused_fake_quant_ste(*primals), tangents[0]
+
+
+def _kernel_route(x: jnp.ndarray, axis) -> bool:
+    """True when this fake-quant call should run through the fused
+    Pallas kernel (``kernels.ops.fused_fake_quant``): the kernel only
+    implements the per-channel-last layout (range reduced over every
+    non-final axis), and only a TPU backend compiles it to Mosaic —
+    everywhere else the reference jnp path stays the default.
+    ``GALEN_FQ_KERNEL=1`` forces the kernel (interpreted off-TPU, for
+    parity tests); ``GALEN_FQ_KERNEL=0`` forces the reference path even
+    on TPU. The route is resolved at trace time, so already-compiled
+    functions keep their path."""
+    axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+    if x.ndim < 2 or tuple(axes) != tuple(range(x.ndim - 1)):
+        return False
+    v = os.environ.get("GALEN_FQ_KERNEL")
+    if v is not None:
+        return v == "1"
+    return jax.default_backend() == "tpu"
 
 
 def _minmax(x: jnp.ndarray, axis) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -61,11 +103,16 @@ def fake_quant(x: jnp.ndarray, bits, axis=None) -> jnp.ndarray:
         axis = tuple(range(x.ndim - 1))
     orig_dtype = x.dtype
     xf = x.astype(jnp.float32)
-    q, s, z = quantize(xf, jnp.clip(jnp.asarray(bits), 1, 31), axis)
-    xq = dequantize(q, s, z)
+    if _kernel_route(x, axis):
+        # one-pass fused minmax/quant/dequant (bits >= 32 selects
+        # pass-through inside the kernel)
+        xq = _fused_fake_quant_ste(xf, jnp.asarray(bits, jnp.int32))
+    else:
+        q, s, z = quantize(xf, jnp.clip(jnp.asarray(bits), 1, 31), axis)
+        xq = dequantize(q, s, z)
+        xq = jnp.where(jnp.asarray(bits) >= 32, xf, xq)
     # Straight-through estimator: forward quantized values, identity grad.
-    xq = xf + jax.lax.stop_gradient(xq - xf)
-    out = jnp.where(jnp.asarray(bits) >= 32, xf, xq)
+    out = xf + jax.lax.stop_gradient(xq - xf)
     return out.astype(orig_dtype)
 
 

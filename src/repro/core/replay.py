@@ -120,23 +120,35 @@ def device_replay_init(capacity: int, state_dim: int,
         size=jnp.zeros((), jnp.int32))
 
 
-@jax.jit
-def _device_push(data: DeviceReplayData, s, a, r, s2, d, start, new_ptr,
-                 new_size) -> DeviceReplayData:
-    """Ring write of n transitions starting at slot ``start`` (n static
-    from the operand shapes; ptr/size bookkeeping is precomputed by the
-    host shim so oversized batches land where sequential pushes would)."""
+def device_replay_push(data: DeviceReplayData, s, a, r, s2,
+                       d) -> DeviceReplayData:
+    """Pure ring write of n transitions (n static from the operand
+    shapes; ``ptr``/``size`` bookkeeping is carried in the pytree, so
+    the write is scan-safe — the epoch engine chains E of these as
+    carry transitions). Oversized batches keep only the last
+    ``capacity`` rows, landing where sequential pushes would have left
+    them (the ``ReplayBuffer.push_batch`` reference semantics)."""
     capacity = data.states.shape[0]
     n = s.shape[0]
-    idx = (start + jnp.arange(n)) % capacity
+    if n == 0:
+        return data
+    if n >= capacity:
+        s, a, r, s2, d = (x[n - capacity:] for x in (s, a, r, s2, d))
+    m = s.shape[0]
+    # slot of the first surviving row under sequential-push semantics
+    start = (data.ptr + (n - m)) % capacity
+    idx = (start + jnp.arange(m)) % capacity
     return DeviceReplayData(
         states=data.states.at[idx].set(s),
         actions=data.actions.at[idx].set(a),
         rewards=data.rewards.at[idx].set(r),
         next_states=data.next_states.at[idx].set(s2),
         dones=data.dones.at[idx].set(d),
-        ptr=jnp.asarray(new_ptr, jnp.int32),
-        size=jnp.asarray(new_size, jnp.int32))
+        ptr=((data.ptr + n) % capacity).astype(jnp.int32),
+        size=jnp.minimum(data.size + n, capacity).astype(jnp.int32))
+
+
+_device_push = jax.jit(device_replay_push)
 
 
 def device_replay_sample(data: DeviceReplayData, key, batch: int):
@@ -184,17 +196,29 @@ class DeviceReplay:
         r = np.asarray(r, np.float32)
         s_next = np.asarray(s_next, np.float32)
         done = np.asarray(done, np.float32)
-        if n >= self.capacity:        # only the tail survives (see host ref)
-            s, a, r = s[n - self.capacity:], a[n - self.capacity:], \
-                r[n - self.capacity:]
-            s_next, done = s_next[n - self.capacity:], \
-                done[n - self.capacity:]
-        # slot of the first surviving row under sequential-push semantics
-        start = (self.ptr + n - s.shape[0]) % self.capacity
+        data = self.data
+        if n >= self.capacity:
+            # trim to the surviving tail on the host — no oversized
+            # transfer, one compiled form for every oversized n; the
+            # pre-advanced ptr lands the tail (and the final ptr) where
+            # sequential pushes would
+            cut = n - self.capacity
+            s, a, r = s[cut:], a[cut:], r[cut:]
+            s_next, done = s_next[cut:], done[cut:]
+            data = data._replace(ptr=jnp.asarray(
+                (self.ptr + cut) % self.capacity, jnp.int32))
+        # host mirrors advance without touching the device values
         self.ptr = int((self.ptr + n) % self.capacity)
         self.size = int(min(self.size + n, self.capacity))
-        self.data = _device_push(self.data, s, a, r, s_next, done,
-                                 start, self.ptr, self.size)
+        self.data = _device_push(data, s, a, r, s_next, done)
+
+    def adopt(self, data: DeviceReplayData, pushed: int):
+        """Take a post-dispatch ring as truth after ``pushed`` transitions
+        were written device-side (the epoch engine's path); the host
+        ptr/size mirrors advance arithmetically, never syncing."""
+        self.data = data
+        self.ptr = int((self.ptr + pushed) % self.capacity)
+        self.size = int(min(self.size + pushed, self.capacity))
 
     def sample(self, batch: int):
         """Host-visible uniform sample (compat path + determinism tests).

@@ -51,11 +51,14 @@ def compute_reward(cfg: RewardConfig, acc: float, latency: float,
     raise ValueError(cfg.kind)
 
 
-def compute_reward_batch(cfg: RewardConfig, acc, latency, ref_latency):
-    """``compute_reward`` over (K,) arrays; traceable (jnp ops only)."""
+def compute_reward_batch(cfg: RewardConfig, acc, latency, ref_latency,
+                         xp=jnp):
+    """``compute_reward`` over (K,) arrays. Traceable with the default
+    ``xp=jnp`` (the fused/epoch engines); the numpy engines pass
+    ``xp=np`` to keep their record tail off the device."""
     ratio = latency / (cfg.target_ratio * ref_latency)
     if cfg.kind == "absolute":
-        return acc + cfg.beta * jnp.abs(ratio - 1.0)
+        return acc + cfg.beta * xp.abs(ratio - 1.0)
     if cfg.kind == "hard_exponential":
-        return acc * jnp.where(ratio > 1.0, ratio ** cfg.hard_beta, 1.0)
+        return acc * xp.where(ratio > 1.0, ratio ** cfg.hard_beta, 1.0)
     raise ValueError(cfg.kind)

@@ -32,6 +32,15 @@ host dispatch:
   arrays live in the scan carry. Validation and learning then reuse the
   fused paths (``accuracy_policy_batch`` + ``update_chunk``).
 
+* epoch mode (``FusedCompressionSearch(..., epoch_batches=E)`` /
+  ``run_epoch``) — E whole episode batches as ONE ``jit(lax.scan)``
+  over batches: the scan body chains the fused rollout, the traced-
+  cspec validation, the reward, the ``DeviceReplay`` ring write, and
+  the update chunk as pure carry transitions over ``(AgentState, ring,
+  rollout PRNG, best-policy argmax)``. Metrics come back as (E, K)
+  device arrays with exactly one host readback per epoch; agent/ring
+  buffers are donated to the epoch executable so they update in place.
+
 Cost per episode batch (K episodes over L actionable units,
 post-compile; u = fused update-chunk dispatches):
 
@@ -44,15 +53,20 @@ post-compile; u = fused update-chunk dispatches):
   batched   L                     2 + u    (fused validation
                                   + one bulk ring write)
   fused     0                     3 + u    (<= 4 total)
+  epoch     0                     1 / E    (one dispatch and
+                                  one readback per E batches)
   ========  ====================  ===========================
 
 A "host environment step" is one oracle probe + state build + actor
 forward + action->CMP mapping round-trip on the host; the fused
 engine's three dispatches are rollout, validation, and the replay ring
 write (its ``dispatch_log`` records them so benchmarks can assert the
-count never regresses). The numpy engines stay as the parity
-references — ``tests/test_fused.py`` property-tests the fused rollout
-against ``BatchedCompressionSearch`` step for step.
+count never regresses; epoch mode logs one ``"epoch"`` entry per E
+batches). The numpy engines stay as the parity references —
+``tests/test_fused.py`` property-tests the fused rollout against
+``BatchedCompressionSearch`` step for step, and ``tests/test_epoch.py``
+property-tests epoch mode against the per-batch fused engine (records,
+final ``AgentState``, ring contents).
 
 Where the learning happens (PR 2: the functional agent core)
 -----------------------------------------------------------
@@ -99,15 +113,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.constraints import legal_tables
-from repro.core.ddpg import (DDPGAgent, DDPGConfig, agent_act_batch,
-                             population_update_chunk, tree_index, tree_stack)
+from repro.core.ddpg import (_SCAN_UNROLL as _UPDATE_SCAN_UNROLL,
+                             DDPGAgent, DDPGConfig, agent_act_batch,
+                             chunk_sample_keys, observe_states_pure,
+                             population_update_chunk, tree_index,
+                             tree_stack, update_step)
 from repro.core.latency import (V5E, HardwareTarget, LatencyContext,
-                                get_jax_oracle, policy_latency,
+                                fifo_cached, get_jax_oracle, policy_latency,
                                 policy_latency_batch)
 from repro.core.policy import (Policy, PolicyBatch, action_columns,
                                map_actions, map_actions_batch, n_actions,
                                policies_from_batch, stack_policies)
-from repro.core.replay import DeviceReplay
+from repro.core.replay import (DeviceReplay, device_replay_push,
+                               device_replay_sample)
 from repro.core.reward import RewardConfig, compute_reward, \
     compute_reward_batch
 from repro.core.sensitivity import SensitivityResult, run_sensitivity
@@ -375,9 +393,8 @@ class BatchedCompressionSearch(CompressionSearch):
             self.cmodel.accuracy_policy_batch(self.val_batch, pb))
         lats = policy_latency_batch(self.specs, pb, self.hw, self.ctx,
                                     cfg.window).total_s
-        rewards = np.asarray([
-            compute_reward(cfg.reward, float(accs[j]), float(lats[j]),
-                           self.ref_lat.total_s) for j in range(k)])
+        rewards = compute_reward_batch(cfg.reward, accs, lats,
+                                       self.ref_lat.total_s, xp=np)
         return self._push_and_record(
             eps, warmup, sigmas, partials, np.stack(step_states),
             np.stack(step_actions), accs, lats, rewards)
@@ -410,17 +427,21 @@ class BatchedCompressionSearch(CompressionSearch):
         n_live = int((~warmup).sum())
         self._queue_updates(self.agent.cfg.updates_per_episode * n_live)
 
+        # record tail: ONE bulk conversion per batch (a single
+        # np.asarray readback each), not per-episode scalar float()s
+        acc_l, lat_l, rew_l, sig_l = (
+            np.asarray(x, np.float64).tolist()
+            for x in (accs, lats, rewards, sigmas))
+        denom = cfg.reward.target_ratio * self.ref_lat.total_s
         records = []
         for j, e in enumerate(eps):
-            ratio = float(lats[j]) / (cfg.reward.target_ratio *
-                                      self.ref_lat.total_s)
             records.append(EpisodeRecord(
-                episode=e, reward=float(rewards[j]),
-                accuracy=float(accs[j]), latency_s=float(lats[j]),
-                latency_ratio=ratio,
+                episode=e, reward=rew_l[j],
+                accuracy=acc_l[j], latency_s=lat_l[j],
+                latency_ratio=lat_l[j] / denom,
                 macs_frac=pols[j].macs_fraction(self.specs),
                 bops=pols[j].bops(self.specs) if cfg.track_bops else 0.0,
-                sigma=float(sigmas[j]), policy=pols[j]))
+                sigma=sig_l[j], policy=pols[j]))
         return records
 
     def _chunk_size(self) -> int:
@@ -516,6 +537,145 @@ def make_rollout_fn(cfg: DDPGConfig, oracle, legal, static_tab, spec_steps):
     return rollout
 
 
+# ===========================================================================
+# Epoch-fused engine: E episode batches as one jit(lax.scan)
+# ===========================================================================
+
+def _schedule_segments(schedule: tuple) -> List[tuple]:
+    """Group a static update schedule into (n_updates, batch count)
+    runs of consecutive equal entries: (32, 64, 64, 64) -> [(32, 1),
+    (64, 3)]. Each run becomes its own scan with an UNMASKED inner
+    update scan of exactly n steps — no wasted masked GEMMs, no
+    per-step tree selects, and the same op sequence as the per-batch
+    ``update_chunk``. Steady-state epochs are one segment."""
+    segs: List[tuple] = []
+    for n in schedule:
+        if segs and segs[-1][0] == n:
+            segs[-1] = (n, segs[-1][1] + 1)
+        else:
+            segs.append((n, 1))
+    return segs
+
+
+def make_epoch_fn(cfg: DDPGConfig, reward_cfg: RewardConfig, rollout_fn,
+                  acc_fn, T: int, K: int, schedule: tuple):
+    """Build the pure epoch function: E = len(schedule) episode batches
+    as one traced program — a ``lax.scan`` per schedule segment whose
+    body chains the fused rollout, the traced-cspec validation
+    (``acc_fn``), the reward, the replay ring write, and the update
+    scan as carry transitions over ``(AgentState, DeviceReplayData,
+    rollout PRNG key, best)``.
+
+    ``schedule`` is the STATIC per-batch fused-update step count (see
+    ``FusedCompressionSearch._update_schedule``): the update-sampling
+    keys every batch will consume are derived at trace time with the
+    exact ``chunk_sample_keys`` splits the per-batch path performs —
+    ``jax.random.split`` is not prefix-stable across lengths, so a
+    traced count could not reproduce them — and consecutive equal
+    counts share one scan (``_schedule_segments``), so every batch runs
+    exactly its budget. Steady-state epochs all share one schedule,
+    hence one compiled executable (FIFO-cached by the engine).
+    Everything member-specific is an argument, so a population can
+    ``jit(vmap)`` one epoch function across stacked members.
+
+    Returns ``epoch(st, ring, rkey, keep0, wb0, ab0, sigmas, warmup,
+    hwp, shares, ref_total, cols, ref_total_s) -> (st, ring, rkey,
+    best, ys)`` with ``ys = (accs, lats, rewards, keep, wb, ab)``
+    stacked (E, ...) — the device-side metrics read back in one
+    transfer — and ``best = (reward, episode offset, (keep, wb, ab))``
+    the in-carry argmax over the epoch's E*K episodes.
+    """
+    segments = _schedule_segments(schedule)
+
+    def epoch(st, ring, rkey, keep0, wb0, ab0, sigmas, warmup, hwp,
+              shares, ref_total, cols, ref_total_s):
+        # trace-time sample-key schedule (zero runtime dispatches):
+        # consume st.key exactly as E per-batch update_chunk calls would
+        key = st.key
+        seg_keys = []
+        for n, cnt in segments:
+            if n > 0:
+                ks = []
+                for _ in range(cnt):
+                    key, sk = chunk_sample_keys(key, n)
+                    ks.append(sk)
+                seg_keys.append(jnp.stack(ks))      # (cnt, n, key)
+            else:
+                seg_keys.append(None)
+        final_key = key
+
+        def make_body(n):
+            def body(carry, x):
+                st, ring, rk, best = carry
+                (e, sig, warm), skeys = x[:3], (x[3] if n > 0 else None)
+                rk, bk = jax.random.split(rk)
+                keys = jax.random.split(bk, T)
+                keep, wb, ab, states, actions, lats = rollout_fn(
+                    st, keep0, wb0, ab0, sig, warm, hwp, shares,
+                    ref_total, cols, keys)
+                # the normalizer advances at the batch boundary, exactly
+                # as the host engines' observe_states does
+                st = observe_states_pure(st, states.reshape(T * K, -1))
+                accs = acc_fn(keep.astype(jnp.int32),
+                              wb.astype(jnp.int32), ab.astype(jnp.int32))
+                rewards = compute_reward_batch(reward_cfg, accs, lats,
+                                               ref_total_s)
+                order = lambda z: jnp.swapaxes(z, 0, 1).reshape(
+                    T * K, *z.shape[2:])
+                nxt = jnp.concatenate([states[1:], states[-1:]])
+                done = jnp.zeros((T, K), jnp.float32).at[-1].set(1.0)
+                ring = device_replay_push(
+                    ring, order(states), order(actions),
+                    jnp.repeat(rewards, T).astype(jnp.float32),
+                    order(nxt), order(done))
+                if n > 0:     # this batch's update chunk, in-scan
+                    def ustep(c, k2):
+                        batch = device_replay_sample(ring, k2,
+                                                     cfg.batch_size)
+                        return update_step(cfg, c, batch)
+
+                    st, _losses = jax.lax.scan(
+                        ustep, st, skeys,
+                        unroll=min(_UPDATE_SCAN_UNROLL, n))
+                # in-carry best-policy tracking; strict > keeps the
+                # earliest argmax, the rule run()'s host loop applies
+                j = jnp.argmax(rewards)
+                better = rewards[j] > best[0]
+                pick = lambda a, b: jnp.where(better, a, b)
+                best = (pick(rewards[j], best[0]),
+                        pick(e * K + j, best[1]),
+                        jax.tree.map(pick, (keep[j], wb[j], ab[j]),
+                                     best[2]))
+                return (st, ring, rk, best), (accs, lats, rewards, keep,
+                                              wb, ab)
+
+            return body
+
+        L = keep0.shape[-1]
+        best0 = (jnp.asarray(-jnp.inf, jnp.float32),
+                 jnp.zeros((), jnp.int32),
+                 tuple(jnp.zeros((L,), jnp.float32) for _ in range(3)))
+        carry = (st, ring, rkey, best0)
+        outs, base = [], 0
+        for (n, cnt), sk in zip(segments, seg_keys):
+            xs = (jnp.arange(base, base + cnt, dtype=jnp.int32),
+                  sigmas[base:base + cnt], warmup[base:base + cnt])
+            if n > 0:
+                xs = xs + (sk,)
+            carry, ys = jax.lax.scan(make_body(n), carry, xs)
+            outs.append(ys)
+            base += cnt
+        st, ring, rk, best = carry
+        ys = outs[0] if len(outs) == 1 else jax.tree.map(
+            lambda *zs: jnp.concatenate(zs, axis=0), *outs)
+        return st._replace(key=final_key), ring, rk, best, ys
+
+    return epoch
+
+
+_EPOCH_CACHE_MAX = 16
+
+
 class FusedCompressionSearch(BatchedCompressionSearch):
     """K episodes per rollout, the rollout itself ONE jit dispatch.
 
@@ -535,12 +695,22 @@ class FusedCompressionSearch(BatchedCompressionSearch):
     (``seed``-derived, separate from the agent's update-sampling key);
     ``_last_batch_key`` exposes the per-batch key so parity tests can
     replay the exact draws through the numpy reference engine.
+
+    With ``epoch_batches=E > 0`` the engine runs in epoch mode:
+    ``run()`` dispatches E batches at a time through ``run_epoch`` —
+    one jit execution (agent/ring buffers donated, so they update in
+    place) and one host readback per epoch, instead of <= 4 dispatches
+    and per-batch syncs. The epoch scan carries the same PRNG streams
+    and consumes them with the same split pattern as the per-batch
+    path, so a same-seed per-batch engine reproduces an epoch run
+    draw for draw (``tests/test_epoch.py``).
     """
 
     def __init__(self, cmodel, val_batch, search_cfg: SearchConfig,
                  ctx: LatencyContext, hw: HardwareTarget = V5E,
                  sens: Optional[SensitivityResult] = None,
-                 calib_batch=None, batch_size: int = 8):
+                 calib_batch=None, batch_size: int = 8,
+                 epoch_batches: int = 0):
         super().__init__(cmodel, val_batch, search_cfg, ctx, hw=hw,
                          sens=sens, calib_batch=calib_batch,
                          batch_size=batch_size)
@@ -559,6 +729,10 @@ class FusedCompressionSearch(BatchedCompressionSearch):
         self._rollout_key = jax.random.PRNGKey(search_cfg.seed + 0x5EED)
         self._last_batch_key = None
         self.dispatch_log: List[str] = []
+        # epoch mode: run() rolls E batches per run_epoch dispatch
+        self.epoch_batches = max(0, epoch_batches)
+        self._epoch_cache: dict = {}
+        self.last_epoch_best: Optional[tuple] = None
 
     # ------------------------------------------------------------------
     def _rollout_args(self, first_episode: int, k: int) -> tuple:
@@ -615,6 +789,145 @@ class FusedCompressionSearch(BatchedCompressionSearch):
         self.dispatch_log.append("rollout")
         return self._finish_batch(first_episode, k, out)
 
+    # ------------------------------------------------------- epoch mode
+    def _update_schedule(self, first_episode: int,
+                         n_batches: int) -> tuple:
+        """Per-batch fused-update step counts for an epoch, as a STATIC
+        tuple — exactly the budgets ``_queue_updates``/``_flush_updates``
+        would dispatch batch by batch. Warmup positions come from the
+        episode indices and the replay-fill gate from the host size
+        mirror (pushes per batch are fixed at T*K), so the whole
+        schedule is known before the dispatch; it must be, because the
+        epoch trace derives its update-sampling keys from it."""
+        K, T = self.batch_size, len(self.steps)
+        cfg = self.agent.cfg
+        size, cap = self.replay.size, self.replay.capacity
+        sched = []
+        for e in range(n_batches):
+            warmup, _ = self._batch_schedule(first_episode + e * K, K)
+            n = cfg.updates_per_episode * int((~warmup).sum())
+            size = min(size + T * K, cap)
+            sched.append(n if (n > 0 and size >= cfg.batch_size) else 0)
+        return tuple(sched)
+
+    def _epoch_args(self, first_episode: int, n_batches: int) -> tuple:
+        """Per-epoch argument tuple for the ``make_epoch_fn`` callable
+        (every element stackable across population members). Unlike
+        ``_rollout_args`` this does NOT advance the rollout PRNG on the
+        host — the scan splits it per batch and the engine adopts the
+        final carry."""
+        K = self.batch_size
+        scheds = [self._batch_schedule(first_episode + e * K, K)
+                  for e in range(n_batches)]
+        warm = np.stack([w for w, _ in scheds])
+        sig = np.stack([s for _, s in scheds])
+        keep0, wb0, ab0 = self._ref_rows
+        return (self.agent.state_for_dispatch(), self.replay.data,
+                self._rollout_key, keep0, wb0, ab0,
+                jnp.asarray(sig), jnp.asarray(warm), self.oracle.hwp,
+                jnp.asarray(self.tables.shares),
+                jnp.asarray(self.tables.ref_total, jnp.float32),
+                self._cols,
+                jnp.asarray(self.ref_lat.total_s, jnp.float32))
+
+    def _make_epoch_fn(self, schedule: tuple):
+        """The pure epoch function for this engine and schedule (the
+        population engine vmaps the same construction)."""
+        return make_epoch_fn(
+            self.agent.cfg, self.cfg.reward, self._rollout_fn,
+            self.cmodel.accuracy_policy_fn(self.val_batch),
+            len(self.steps), self.batch_size, schedule)
+
+    def _epoch_fn_for(self, schedule: tuple):
+        """Compiled epoch executable, FIFO-cached per schedule (steady-
+        state epochs all share one schedule => one compilation). Agent
+        state and ring buffers are donated: they update in place and the
+        pre-dispatch pytrees become invalid — the engine adopts the
+        outputs immediately."""
+        params = self.cmodel.params
+        hit = fifo_cached(
+            self._epoch_cache, _EPOCH_CACHE_MAX,
+            (self.batch_size, schedule, id(params)),
+            lambda h: h[0] is params,
+            lambda: (params, jax.jit(self._make_epoch_fn(schedule),
+                                     donate_argnums=(0, 1))))
+        return hit[1]
+
+    def run_epoch(self, first_episode: int,
+                  n_batches: int) -> List[EpisodeRecord]:
+        """E episode batches — rollout, validation, reward, ring write,
+        updates, metrics — as ONE jit execution, then ONE host readback
+        that rehydrates the records in bulk."""
+        if n_batches <= 0:
+            return []
+        self._flush_updates()          # epoch budgets are computed fresh
+        schedule = self._update_schedule(first_episode, n_batches)
+        fn = self._epoch_fn_for(schedule)
+        out = fn(*self._epoch_args(first_episode, n_batches))
+        self.dispatch_log.append("epoch")
+        return self._finish_epoch(first_episode, n_batches, out)
+
+    def _finish_epoch(self, first_episode: int, n_batches: int,
+                      out: tuple) -> List[EpisodeRecord]:
+        """Adopt the carried state/ring/PRNG, do the epoch's single
+        device->host transfer, and build the records."""
+        cfg = self.cfg
+        K, T = self.batch_size, len(self.steps)
+        st, ring, rkey, best, ys = out
+        self.replay.adopt(ring, n_batches * T * K)
+        self._rollout_key = rkey
+        self.agent.adopt_state(st)
+        accs, lats, rewards, keep, wb, ab = ys
+        # THE one host readback per epoch: metrics, policies, the norm
+        # stats, and the in-carry best — records need no device values
+        got = jax.device_get(
+            (accs, lats, rewards, keep, wb, ab,
+             (st.norm_count, st.norm_mean, st.norm_var),
+             (best[0], best[1])))
+        accs, lats, rewards, keep, wb, ab, norm, best_hv = got
+        self.agent.norm.count = float(norm[0])
+        self.agent.norm.mean = np.asarray(norm[1], np.float32)
+        self.agent.norm.var = np.asarray(norm[2], np.float32)
+        self.last_epoch_best = (first_episode + int(best_hv[1]),
+                                float(best_hv[0]))
+        denom = cfg.reward.target_ratio * self.ref_lat.total_s
+        records = []
+        for e in range(n_batches):
+            _, sigmas = self._batch_schedule(first_episode + e * K, K)
+            pb = PolicyBatch(keep=np.asarray(keep[e], np.float64),
+                             w_bits=np.asarray(wb[e], np.float64),
+                             a_bits=np.asarray(ab[e], np.float64))
+            pols = policies_from_batch(self.specs, pb)
+            acc_l, lat_l, rew_l = (
+                np.asarray(x, np.float64).tolist()
+                for x in (accs[e], lats[e], rewards[e]))
+            for j in range(K):
+                records.append(EpisodeRecord(
+                    episode=first_episode + e * K + j, reward=rew_l[j],
+                    accuracy=acc_l[j], latency_s=lat_l[j],
+                    latency_ratio=lat_l[j] / denom,
+                    macs_frac=pols[j].macs_fraction(self.specs),
+                    bops=pols[j].bops(self.specs) if cfg.track_bops
+                    else 0.0,
+                    sigma=float(sigmas[j]), policy=pols[j]))
+        return records
+
+    def _chunk_size(self) -> int:
+        if self.epoch_batches > 0:
+            return self.batch_size * self.epoch_batches
+        return self.batch_size
+
+    def _run_chunk(self, first_episode: int,
+                   k: int) -> List[EpisodeRecord]:
+        if self.epoch_batches > 0:
+            nb, rem = divmod(k, self.batch_size)
+            recs = self.run_epoch(first_episode, nb) if nb else []
+            if rem:       # trailing partial batch: the per-batch path
+                recs += self.run_episode_batch(
+                    first_episode + nb * self.batch_size, rem)
+            return recs
+        return self.run_episode_batch(first_episode, k)
+
 
 class PopulationSearch:
     """P member searches whose agents share every update dispatch.
@@ -659,6 +972,8 @@ class PopulationSearch:
         self.fuse_rollouts = fuse_rollouts
         self._pop_rollout = None
         self._fusable = None
+        self._pop_epoch_cache: dict = {}
+        self._epoch_fusable = None
 
     def _rollouts_fusable(self) -> bool:
         """One vmapped rollout needs one traced step function: same spec
@@ -694,6 +1009,70 @@ class PopulationSearch:
         return [m._finish_batch(first_episode, k, tree_index(outs, i))
                 for i, m in enumerate(self.members)]
 
+    # ------------------------------------------------------- epoch mode
+    def _epochs_fusable(self) -> bool:
+        """A shared epoch dispatch bakes the validator and the reward
+        into one trace on top of the rollout requirements: members must
+        share the compressible model, the validation batch, and the
+        reward config (the per-target reference-latency scale stays an
+        argument) and all run in epoch mode."""
+        if self._epoch_fusable is None:
+            ms = self.members
+            m0 = ms[0]
+            self._epoch_fusable = self._rollouts_fusable() and \
+                all(getattr(m, "epoch_batches", 0) > 0 for m in ms) and \
+                all(m.cmodel is m0.cmodel
+                    and m.val_batch is m0.val_batch
+                    and m.cfg.reward == m0.cfg.reward for m in ms[1:])
+        return self._epoch_fusable
+
+    def run_epoch(self, first_episode: int,
+                  n_batches: int) -> List[List[EpisodeRecord]]:
+        """All members' epochs as ONE vmapped jit execution — E batches
+        x P members of rollout+validate+push+update in a single
+        dispatch. Members whose update schedules diverge (they ran
+        different histories) fall back to per-member epoch dispatches.
+        """
+        if n_batches <= 0:
+            return [[] for _ in self.members]
+        for m in self.members:
+            m._flush_updates()
+        scheds = {m._update_schedule(first_episode, n_batches)
+                  for m in self.members}
+        if len(scheds) != 1 or not self._epochs_fusable():
+            return [m.run_epoch(first_episode, n_batches)
+                    for m in self.members]
+        schedule = next(iter(scheds))
+        m0 = self.members[0]
+        params = m0.cmodel.params
+        hit = fifo_cached(
+            self._pop_epoch_cache, _EPOCH_CACHE_MAX,
+            (m0.batch_size, schedule, id(params)),
+            lambda h: h[0] is params,
+            lambda: (params,
+                     jax.jit(jax.vmap(m0._make_epoch_fn(schedule)),
+                             donate_argnums=(0, 1))))
+        args = [m._epoch_args(first_episode, n_batches)
+                for m in self.members]
+        outs = hit[1](*jax.tree.map(lambda *xs: jnp.stack(xs), *args))
+        res = []
+        for i, m in enumerate(self.members):
+            m.dispatch_log.append("epoch")   # ONE shared dispatch
+            res.append(m._finish_epoch(first_episode, n_batches,
+                                       tree_index(outs, i)))
+        return res
+
+    def _run_epoch_chunk(self, first_episode: int,
+                         k: int) -> List[List[EpisodeRecord]]:
+        K = self.members[0].batch_size
+        nb, rem = divmod(k, K)
+        chunks = self.run_epoch(first_episode, nb) if nb \
+            else [[] for _ in self.members]
+        if rem:           # trailing partial batch: per-batch fused path
+            tail = self._run_fused_chunk(first_episode + nb * K, rem)
+            chunks = [c + t for c, t in zip(chunks, tail)]
+        return chunks
+
     def run(self, episodes: Optional[int] = None,
             verbose: bool = False) -> List[SearchResult]:
         """Run all members for the same episode count; returns one
@@ -708,9 +1087,14 @@ class PopulationSearch:
             e = 0
             while e < n:
                 k = min(self.members[0]._chunk_size(), n - e)
-                if self.fuse_rollouts and self._rollouts_fusable():
+                if self.fuse_rollouts and self._epochs_fusable():
+                    chunks = self._run_epoch_chunk(e, k)
+                elif self.fuse_rollouts and self._rollouts_fusable() \
+                        and k <= self.members[0].batch_size:
                     chunks = self._run_fused_chunk(e, k)
                 else:
+                    # epoch members whose epochs can't share one trace
+                    # keep their own per-member epoch decomposition
                     chunks = [m._run_chunk(e, k) for m in self.members]
                 for i, recs in enumerate(chunks):
                     for rec in recs:

@@ -86,3 +86,37 @@ def test_traced_bits():
     out32 = f(jnp.int32(32))
     np.testing.assert_allclose(np.asarray(out32), np.asarray(x), rtol=1e-6)
     assert float(jnp.max(jnp.abs(out8 - x))) > 0
+
+
+# ------------------------------------------------- Pallas kernel routing
+
+def test_kernel_route_matches_ref(monkeypatch):
+    """GALEN_FQ_KERNEL=1 sends per-channel-last fake_quant through the
+    fused Pallas kernel (interpreted off-TPU): same forward values,
+    same STE gradient, same bits>=32 pass-through as the ref path."""
+    from repro.core.quantization import fake_quant_act
+    monkeypatch.delenv("GALEN_FQ_KERNEL", raising=False)
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 32, 16)) * 3.0
+    ref_out = fake_quant_act(x, 4)
+    ref32 = fake_quant_act(x, 32)
+    monkeypatch.setenv("GALEN_FQ_KERNEL", "1")
+    np.testing.assert_allclose(np.asarray(fake_quant_act(x, 4)),
+                               np.asarray(ref_out), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fake_quant_act(x, 32)),
+                               np.asarray(ref32), rtol=1e-6)
+    w = jax.random.normal(jax.random.PRNGKey(6), (32, 8))
+    g = jax.grad(lambda t: jnp.sum(fake_quant_weight(t, 4)))(w)
+    assert float(jnp.mean(jnp.abs(g - 1.0))) < 0.15   # STE survives
+
+
+def test_kernel_route_layout_guard(monkeypatch):
+    """Non-channel-last reductions and 1-D inputs never route to the
+    kernel, even when forced on."""
+    from repro.core.quantization import _kernel_route
+    monkeypatch.setenv("GALEN_FQ_KERNEL", "1")
+    x2 = jnp.zeros((8, 4))
+    assert _kernel_route(x2, (0,))
+    assert not _kernel_route(x2, (1,))          # reduce over channels
+    assert not _kernel_route(jnp.zeros(8), (0,))
+    monkeypatch.setenv("GALEN_FQ_KERNEL", "0")
+    assert not _kernel_route(x2, (0,))          # forced off
