@@ -24,7 +24,8 @@ import sys
 
 KEY_FIELDS = ("table", "engine", "members", "batch_size",
               "updates_per_episode")
-METRICS = ("eps_per_s", "independent_eps_per_s", "population_eps_per_s")
+METRICS = ("eps_per_s", "independent_eps_per_s", "population_eps_per_s",
+           "runs_per_s")
 
 
 def row_key(row: dict) -> tuple:

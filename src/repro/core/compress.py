@@ -487,6 +487,16 @@ def stack_cspecs(cspecs: Sequence[Any]):
 class _BatchedAccuracyMixin:
     """Batched accuracy evaluation, shared by both adapters."""
 
+    def cspec_builder(self):
+        """The traced cspec builder for the CURRENT params, cached per
+        params identity — ONE builder (and one eager prune-score pass)
+        shared by the batched/fused validators (``accuracy_policy_fn``)
+        and the fused sensitivity analysis (``core.sensitivity``)."""
+        cached = getattr(self, "_builder_cache", None)
+        if cached is None or cached[0] is not self.params:
+            self._builder_cache = (self.params, self._make_cspec_builder())
+        return self._builder_cache[1]
+
     def build_cspec_batch(self, policies: Sequence[Policy]):
         return stack_cspecs([self.build_cspec(p) for p in policies])
 
@@ -518,7 +528,7 @@ class _BatchedAccuracyMixin:
         cached = getattr(self, "_acc_pb_cache", None)
         if cached is None or cached[0] is not batch \
                 or cached[3] is not self.params:
-            build = self._make_cspec_builder()
+            build = self.cspec_builder()
             fn = jax.vmap(
                 lambda k, w, a: self.accuracy(batch, build(k, w, a)))
             self._acc_pb_cache = (batch, fn, jax.jit(fn), self.params)

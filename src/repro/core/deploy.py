@@ -18,21 +18,41 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def quantize_weight(w: jnp.ndarray, bits: int) -> dict:
-    """Symmetric integer quantization along the contraction axis (-2)."""
+    """Symmetric integer quantization along the contraction axis (-2).
+
+    ``bits`` must be a Python int in [2, 8]. The grid honors the ASKED
+    width — ``2**(bits-1) - 1`` positive levels — so 3- and 2-bit
+    requests are not silently upgraded to the int4 grid; ``bits <= 4``
+    ships in the packed-int4 container, 5..8 in the int8 one. Codes are
+    clipped symmetrically to [-qmax, qmax]: the ``-2**(bits-1)`` code is
+    never emitted, so a dequantized weight can never overshoot the
+    symmetric ±absmax range by one scale step.
+    """
+    if isinstance(bits, bool) or not isinstance(bits, (int, np.integer)) \
+            or not 2 <= int(bits) <= 8:
+        raise ValueError(
+            f"quantize_weight: bits must be an int in [2, 8], got {bits!r}"
+            " (FP32 layers keep their raw container; 1-bit deployment"
+            " is unsupported)")
+    bits = int(bits)
+    if bits <= 4 and w.shape[-2] % 2 != 0:
+        raise ValueError(
+            f"quantize_weight: packed int4 needs an even contraction dim, "
+            f"got shape {tuple(w.shape)}")
+    qmax = float(2 ** (bits - 1) - 1)
     wf = w.astype(jnp.float32)
     absmax = jnp.maximum(jnp.max(jnp.abs(wf), axis=-2, keepdims=True), 1e-8)
+    scale = absmax / qmax
+    q = jnp.clip(jnp.round(wf / scale), -qmax, qmax).astype(jnp.int8)
     if bits <= 4:
-        scale = absmax / 7.0
-        q = jnp.clip(jnp.round(wf / scale), -8, 7).astype(jnp.int8)
         lo = q[..., 0::2, :].astype(jnp.uint8) & 0xF
         hi = (q[..., 1::2, :].astype(jnp.uint8) & 0xF) << 4
         return {"w_p": (lo | hi).astype(jnp.int8),
                 "w_scale": scale.astype(jnp.float32)}
-    scale = absmax / 127.0
-    q = jnp.clip(jnp.round(wf / scale), -128, 127).astype(jnp.int8)
     return {"w_q": q, "w_scale": scale.astype(jnp.float32)}
 
 
@@ -58,7 +78,10 @@ def quantize_params_for_deploy(params, bits: int = 8,
 
     def walk(node):
         if isinstance(node, dict):
-            if "w" in node and getattr(node["w"], "ndim", 0) >= 2:
+            if "w" in node and getattr(node["w"], "ndim", 0) >= 2 \
+                    and (bits > 4 or node["w"].shape[-2] % 2 == 0):
+                # odd contraction dims cannot pack 2/byte — keep raw,
+                # same rule as the raw_names branch below
                 out = {k: v for k, v in node.items() if k != "w"}
                 out.update(quantize_weight(node["w"], bits))
                 return out

@@ -211,6 +211,9 @@ class CompressionSearch:
         self.agent = DDPGAgent(ddpg_cfg, seed=search_cfg.seed)
         self.replay = DeviceReplay(ddpg_cfg.buffer_size, ddpg_cfg.state_dim,
                                    a_dim, seed=search_cfg.seed)
+        # fused + memoized (ONE jit execution for the whole layer×probe
+        # grid, shared across every engine built on the same model and
+        # calibration batch — population members included)
         self.sens = sens if sens is not None else run_sensitivity(
             cmodel, calib_batch if calib_batch is not None else val_batch)
         self._jit_acc = jax.jit(lambda cs: cmodel.accuracy(val_batch, cs))
@@ -945,6 +948,13 @@ class PopulationSearch:
     populations; see the module docstring) and one chunk size. Members
     whose pending budgets diverge (e.g. different warmup positions)
     fall back to per-member fused flushes for that chunk.
+
+    Construction cost: members built on a common model + calibration
+    batch share ONE sensitivity analysis — ``run_sensitivity`` is fused
+    (one jit execution for the whole layer×probe grid) and memoized per
+    (cmodel, batch, params) identity, so the population constructor
+    pays the analysis once, not P times (and rollout fusion requires
+    the shared table anyway — see ``_rollouts_fusable``).
 
     With ``fuse_rollouts=True``, members that are all
     ``FusedCompressionSearch`` over the same specs/sensitivity/context

@@ -26,7 +26,7 @@ import numpy as np
 from repro.core.latency import (HardwareTarget, LatencyContext,
                                 PolicyLatency, fifo_cached, policy_latency)
 from repro.core.policy import Policy
-from repro.core.sensitivity import SensitivityResult
+from repro.core.sensitivity import FEATURE_PROBES, SensitivityResult
 from repro.core.spec import LayerSpec
 
 KINDS = ("conv", "attn_qkv", "attn_out", "mlp_up", "mlp_down", "moe_up",
@@ -35,7 +35,8 @@ KINDS = ("conv", "attn_qkv", "attn_out", "mlp_up", "mlp_down", "moe_up",
 
 
 def state_dim(action_dim: int) -> int:
-    return 1 + len(KINDS) + 3 + 2 + 2 + 6 + action_dim + 3
+    return (1 + len(KINDS) + 3 + 2 + 2 + len(FEATURE_PROBES)
+            + action_dim + 3)
 
 
 def build_state(specs: Sequence[LayerSpec], t: int, partial: Policy,
@@ -105,8 +106,10 @@ def _compute_static_features(specs, t, sens, ref_lat):
     feats += [s.flops_per_token / total_flops,
               s.weight_elems / total_weights]
     feats += [1.0 if s.prunable else 0.0, 1.0 if s.mix_supported else 0.0]
-    feats += sens.features_for(s.name)
-    static = np.asarray(feats, np.float32)
+    # array-form probe row (log1p KLs; MISSING_KL sentinel where a probe
+    # was not run — legality-aware, see SensitivityResult.feature_row)
+    static = np.concatenate([np.asarray(feats, np.float32),
+                             sens.feature_row(s.name)])
     ref_total = ref_lat.total_s or 1.0
     this_share = sum(u.time_s for u in ref_lat.units
                      if _unit_index(u.name, specs) == t) / ref_total

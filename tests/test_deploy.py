@@ -45,6 +45,58 @@ def test_int4_container_3d_moe():
     assert rel < 0.15
 
 
+@pytest.mark.parametrize("bits,max_rel", [(8, 0.01), (6, 0.04), (4, 0.15),
+                                          (3, 0.30), (2, 0.80)])
+def test_roundtrip_error_bounds(bits, max_rel):
+    """quantize -> unpack/dequantize round-trip error is bounded by the
+    asked grid, for the int8 container AND the packed-int4 one —
+    including odd (2-/3-bit) requests, which must use their own
+    ``2**(bits-1)-1`` grid instead of silently riding the int4 one."""
+    w = jax.random.normal(jax.random.PRNGKey(10), (64, 32))
+    c = quantize_weight(w, bits)
+    q = unpack_int4_weight(c["w_p"]) if bits <= 4 else c["w_q"]
+    qmax = 2 ** (bits - 1) - 1
+    # symmetric clip: the -(qmax+1) code is never emitted
+    assert int(jnp.min(q)) >= -qmax and int(jnp.max(q)) <= qmax
+    back = q.astype(jnp.float32) * c["w_scale"]
+    # no overshoot: dequantized range stays inside the symmetric +-absmax
+    absmax = jnp.max(jnp.abs(w), axis=-2, keepdims=True)
+    assert bool(jnp.all(jnp.abs(back) <= absmax * (1 + 1e-6)))
+    rel = float(jnp.linalg.norm(back - w) / jnp.linalg.norm(w))
+    assert rel < max_rel
+    # the grid actually honors the asked width: at most 2*qmax+1 codes
+    assert len(np.unique(np.asarray(q))) <= 2 * qmax + 1
+
+
+def test_odd_bits_use_their_own_grid():
+    """A 2-bit ask must be coarser than a 4-bit ask of the same weight
+    (the old code quantized both on the int4 grid)."""
+    w = jax.random.normal(jax.random.PRNGKey(11), (64, 32))
+    q2 = unpack_int4_weight(quantize_weight(w, 2)["w_p"])
+    q4 = unpack_int4_weight(quantize_weight(w, 4)["w_p"])
+    assert len(np.unique(np.asarray(q2))) <= 3
+    assert len(np.unique(np.asarray(q4))) > 3
+
+
+@pytest.mark.parametrize("bits", [0, 1, 9, 32, 4.0, "8", None])
+def test_invalid_bits_rejected(bits):
+    w = jnp.ones((4, 4))
+    with pytest.raises((ValueError, TypeError)):
+        quantize_weight(w, bits)
+
+
+def test_odd_contraction_dim():
+    """int4 packing needs an even K: quantize_weight says so clearly,
+    and quantize_params_for_deploy leaves such weights raw (the same
+    rule the raw_names branch applies)."""
+    w = jax.random.normal(jax.random.PRNGKey(12), (5, 4))
+    with pytest.raises(ValueError, match="even contraction"):
+        quantize_weight(w, 4)
+    assert "w_q" in quantize_weight(w, 8)      # int8 container is fine
+    qp = quantize_params_for_deploy({"lin": {"w": w}}, 4)
+    assert "w" in qp["lin"] and "w_p" not in qp["lin"]
+
+
 @pytest.mark.parametrize("bits,max_rel,max_ratio", [(8, 0.1, 0.30),
                                                     (4, 0.6, 0.17)])
 def test_deployed_forward(params, bits, max_rel, max_ratio):
