@@ -15,11 +15,25 @@ The weekly CI job runs this right after the benchmark. Shared runners
 are noisy; the 20% tolerance plus best-of-N timing in the benchmark
 keeps the gate quiet on contention while still catching real
 dispatch-count or compile-path regressions (which cost 2x+, not 20%).
+
+Calibration drift (``--calib-current``/``--calib-baseline``): compares a
+fresh ``benchmarks.calibrate_oracle`` artifact against the committed
+``artifacts/latency_calibration.json``. Two checks:
+
+* every demo row must be within its own stated tolerance (the
+  end-to-end predicted-vs-measured acceptance criterion travels with
+  the artifact);
+* per-(kind, container) ratios, NORMALIZED by that kind's raw-container
+  ratio so absolute box speed cancels, must agree with the baseline
+  within ``--calib-tol`` in log space — this catches a deploy-path or
+  cost-model change that moves int8/int4 relative cost, while staying
+  quiet when the runner is simply a faster or slower machine.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
 
 KEY_FIELDS = ("table", "engine", "members", "batch_size",
@@ -54,18 +68,79 @@ def check(current: list, baseline: list, tol: float):
     return checked, failures
 
 
+def _normalized_ratios(artifact: dict) -> dict:
+    """(kind, container) -> ratio / ratio[kind]["raw"]. Dividing by the
+    raw-container ratio of the SAME kind cancels the host's absolute
+    speed (both numerator and denominator carry it), leaving only the
+    relative cost of the integer container — the thing the oracle's
+    ranking depends on."""
+    out = {}
+    for kind, d in artifact.get("ratios", {}).items():
+        raw = d.get("raw")
+        if not raw or raw <= 0:
+            continue
+        for c, v in d.items():
+            if c != "raw" and v > 0:
+                out[(kind, c)] = v / raw
+    return out
+
+
+def check_calibration(current: dict, baseline: dict, tol: float):
+    """(checked count, failure strings) for calibration drift."""
+    checked, failures = 0, []
+    for r in current.get("demo", []):
+        checked += 1
+        if not r.get("within_tol", False):
+            failures.append(
+                f"demo[{r.get('container')}]: predicted_ratio "
+                f"{r.get('predicted_ratio', float('nan')):.3f} vs "
+                f"measured_ratio "
+                f"{r.get('measured_ratio', float('nan')):.3f} exceeds "
+                f"artifact tolerance {r.get('tolerance')}")
+    cur = _normalized_ratios(current)
+    base = _normalized_ratios(baseline)
+    bound = math.log1p(tol)
+    for key in sorted(set(cur) & set(base), key=str):
+        checked += 1
+        drift = abs(math.log(cur[key] / base[key]))
+        if drift > bound:
+            failures.append(
+                f"calib {key}: normalized ratio {cur[key]:.3g} vs "
+                f"baseline {base[key]:.3g} "
+                f"(|log drift| {drift:.2f} > {bound:.2f})")
+    return checked, failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", default="artifacts/bench_engine.json")
     ap.add_argument("--baseline", default="artifacts/bench_baseline.json")
     ap.add_argument("--tol", type=float, default=0.2,
                     help="allowed fractional regression (default 0.2)")
+    ap.add_argument("--calib-current", default="",
+                    help="fresh calibrate_oracle artifact to drift-check")
+    ap.add_argument("--calib-baseline",
+                    default="artifacts/latency_calibration.json")
+    ap.add_argument("--calib-tol", type=float, default=0.5,
+                    help="allowed normalized-ratio drift (default 0.5)")
+    ap.add_argument("--calib-only", action="store_true",
+                    help="skip the throughput gate")
     args = ap.parse_args(argv)
-    with open(args.current) as f:
-        current = json.load(f)
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    checked, failures = check(current, baseline, args.tol)
+    checked, failures = 0, []
+    if not args.calib_only:
+        with open(args.current) as f:
+            current = json.load(f)
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        checked, failures = check(current, baseline, args.tol)
+    if args.calib_current:
+        with open(args.calib_current) as f:
+            ccur = json.load(f)
+        with open(args.calib_baseline) as f:
+            cbase = json.load(f)
+        c2, f2 = check_calibration(ccur, cbase, args.calib_tol)
+        checked += c2
+        failures += f2
     if not checked:
         print("regression gate: no comparable rows — baseline stale?",
               file=sys.stderr)

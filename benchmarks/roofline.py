@@ -5,8 +5,12 @@ Derived fields are RECOMPUTED here from the raw per-chip counts
 (flops / bytes / collective_bytes / model_flops / chips) so the table is
 independent of the code version that produced a JSON:
 
-    compute_s    = flops_per_chip / peak_bf16
+    compute_s    = flops_per_chip / peak(compute_dtype)
     memory_s     = bytes_per_chip / hbm_bw
+
+``peak(compute_dtype)`` selects ``peak_int8`` for int8-dominant programs
+(mirrors ``RooflineReport.compute_peak``); JSONs from before the field
+existed default to bf16.
     collective_s = collective_bytes_per_chip / ici_bw
     step_s       = max(three terms)
     useful_ratio = model_flops / (flops_per_chip * chips)
@@ -32,7 +36,9 @@ def derive(r: dict, hw=V5E) -> dict:
     if "skipped" in r or "error" in r:
         return r
     out = dict(r)
-    out["compute_s"] = r["flops"] / hw.peak_bf16
+    peak = hw.peak_int8 if r.get("compute_dtype", "bf16") == "int8" \
+        else hw.peak_bf16
+    out["compute_s"] = r["flops"] / peak
     out["memory_s"] = r["bytes"] / hw.hbm_bw
     out["collective_s"] = r["collective_bytes"] / hw.ici_bw
     terms = {"compute": out["compute_s"], "memory": out["memory_s"],

@@ -71,30 +71,51 @@ RAW_WEIGHT_NAMES = ("w_up", "w_gate", "w_down", "dense_w_up",
 
 
 def quantize_params_for_deploy(params, bits: int = 8,
-                               raw_names=RAW_WEIGHT_NAMES):
+                               raw_names=RAW_WEIGHT_NAMES,
+                               bits_for=None):
     """Convert every matmul weight in a params pytree to integer storage.
     Handles ``{"w": ...}`` linear dicts, raw named arrays (MoE weights,
-    embeddings), and scan-stacked leading layer axes."""
+    embeddings), and scan-stacked leading layer axes.
 
-    def walk(node):
+    ``bits_for``: optional callable ``name -> int | None`` giving a
+    per-weight width keyed by the weight's name (the enclosing dict key
+    for ``{"w": ...}`` linear containers, the array's own key for raw
+    named weights). ``None`` or a value > 8 keeps that weight raw;
+    otherwise the value overrides the uniform ``bits``. This is how
+    core/measure.py deploys a per-unit-kind search policy.
+    """
+
+    def resolve(name):
+        if bits_for is None:
+            return bits
+        b = bits_for(name)
+        if b is None or b > 8:
+            return None
+        return max(2, int(b))
+
+    def walk(node, name=""):
         if isinstance(node, dict):
-            if "w" in node and getattr(node["w"], "ndim", 0) >= 2 \
-                    and (bits > 4 or node["w"].shape[-2] % 2 == 0):
+            if "w" in node and getattr(node["w"], "ndim", 0) >= 2:
+                b = resolve(name)
                 # odd contraction dims cannot pack 2/byte — keep raw,
                 # same rule as the raw_names branch below
-                out = {k: v for k, v in node.items() if k != "w"}
-                out.update(quantize_weight(node["w"], bits))
-                return out
+                if b is not None and (b > 4 or node["w"].shape[-2] % 2 == 0):
+                    out = {k: v for k, v in node.items() if k != "w"}
+                    out.update(quantize_weight(node["w"], b))
+                    return out
+                return dict(node)
             out = {}
             for k, v in node.items():
+                b = resolve(k)
                 if k in raw_names and getattr(v, "ndim", 0) >= 2 \
-                        and v.shape[-2] % 2 == 0:
-                    out[k] = quantize_weight(v, bits)
+                        and b is not None \
+                        and (b > 4 or v.shape[-2] % 2 == 0):
+                    out[k] = quantize_weight(v, b)
                 else:
-                    out[k] = walk(v)
+                    out[k] = walk(v, k)
             return out
         if isinstance(node, list):
-            return [walk(v) for v in node]
+            return [walk(v, name) for v in node]
         return node
 
     return walk(params)

@@ -73,6 +73,21 @@ def _act_bytes_per_elem(a_bits: int) -> float:
     return 1.0 if a_bits <= 8 else 2.0
 
 
+# Weight-container buckets, in the fixed order calibration tables use:
+# column 0 = raw (bf16/f32), 1 = int8 container, 2 = packed int4.
+CONTAINERS = ("raw", "int8", "int4")
+
+
+def container_for_bits(w_bits: int) -> str:
+    """Deployment container a ``w_bits``-wide weight ships in — the same
+    thresholds as ``_weight_bytes_per_elem`` (>=9 raw, 5..8 int8, <=4
+    packed int4). Calibration tables (core/measure.py) are keyed by
+    (layer kind, container)."""
+    if w_bits >= 9:
+        return "raw"
+    return "int8" if w_bits >= 5 else "int4"
+
+
 def pad_align(x, align, xp=np):
     """MXU-lane padding: ceil(max(x, 1) / align) * align. One definition
     for all three oracle forms — scalars and numpy arrays with the
@@ -236,22 +251,39 @@ def _attention_extra(spec: LayerSpec, cmp: LayerCMP, hw: HardwareTarget,
     return UnitLatency(spec.name + ".attn", comp, mem)
 
 
+def _scale_unit(u: UnitLatency, f: float) -> UnitLatency:
+    return UnitLatency(u.name, u.compute_s * f, u.memory_s * f,
+                       u.collective_s * f)
+
+
 def policy_latency(specs: Sequence[LayerSpec], policy: Policy,
                    hw: HardwareTarget = V5E,
                    ctx: Optional[LatencyContext] = None,
-                   window: int = 0) -> PolicyLatency:
+                   window: int = 0, calib=None) -> PolicyLatency:
+    """``calib``: optional measured-vs-analytic correction table
+    (core/measure.py ``CalibrationTable``); unit terms are scaled by the
+    fitted (kind, container) factor, attention extras and dispatch
+    overhead by the lumped residual factors."""
     ctx = ctx or LatencyContext(tokens=1, seq_ctx=1, mode="decode")
     fracs = _resolve_keep_fracs(specs, policy)
     out = PolicyLatency()
     n_ops = 0
     for s, c in zip(specs, policy.cmps):
         in_frac = fracs.get(s.dep_group, 1.0) if s.dep_group else 1.0
-        out.units.append(unit_latency(s, c, in_frac, hw, ctx))
+        u = unit_latency(s, c, in_frac, hw, ctx)
+        if calib is not None:
+            w_bits, _ = effective_bits(c)
+            u = _scale_unit(u, calib.factor(s.kind, container_for_bits(w_bits)))
+        out.units.append(u)
         n_ops += 1
         if s.kind == "attn_qkv" and ctx.seq_ctx > 0:
-            out.units.append(_attention_extra(s, c, hw, ctx, window))
+            e = _attention_extra(s, c, hw, ctx, window)
+            if calib is not None:
+                e = _scale_unit(e, calib.extra_factor())
+            out.units.append(e)
             n_ops += 1
-    out.overhead_s = n_ops * hw.op_overhead
+    out.overhead_s = n_ops * hw.op_overhead \
+        * (calib.overhead_factor() if calib is not None else 1.0)
     return out
 
 
@@ -296,8 +328,15 @@ class BatchOracle:
     with numpy array ops instead of the per-layer Python loop."""
 
     def __init__(self, specs: Sequence[LayerSpec], hw: HardwareTarget,
-                 ctx: LatencyContext, window: int = 0):
+                 ctx: LatencyContext, window: int = 0, calib=None):
         self.specs, self.hw, self.ctx, self.window = specs, hw, ctx, window
+        self.calib = calib
+        if calib is not None:
+            self.calib_f = np.asarray(calib.unit_factors(specs), np.float64)
+            self.extra_f = float(calib.extra_factor())
+            self.overhead_f = float(calib.overhead_factor())
+        else:
+            self.calib_f, self.extra_f, self.overhead_f = None, 1.0, 1.0
         L = len(specs)
         g = lambda f: np.asarray([f(s) for s in specs], np.float64)
         self.is_conv = np.asarray([s.kind == "conv" for s in specs])
@@ -399,6 +438,10 @@ class BatchOracle:
                           memory)
         coll = self.coll_coef * n_dim
         unit_time = np.maximum(compute, memory) + coll
+        if self.calib_f is not None:
+            bucket = np.where(wb >= 9, 0, np.where(wb >= 5, 1, 2))
+            unit_time = unit_time * self.calib_f[
+                np.arange(len(self.specs))[None, :], bucket.astype(np.int64)]
 
         if len(self.extra_idx):
             q = self.extra_idx
@@ -415,9 +458,9 @@ class BatchOracle:
         else:
             extra = np.zeros((len(batch), 0))
         return BatchedPolicyLatency(
-            unit_time_s=unit_time, extra_time_s=extra,
+            unit_time_s=unit_time, extra_time_s=extra * self.extra_f,
             extra_spec_idx=self.extra_idx,
-            overhead_s=self.n_ops * hw.op_overhead)
+            overhead_s=self.n_ops * hw.op_overhead * self.overhead_f)
 
 
 def fifo_cached(cache: dict, max_entries: int, key, is_valid, factory):
@@ -451,20 +494,22 @@ _ORACLE_CACHE_MAX = 64
 
 
 def get_batch_oracle(specs: Sequence[LayerSpec], hw: HardwareTarget,
-                     ctx: LatencyContext, window: int = 0) -> BatchOracle:
-    # ctx/hw are frozen dataclasses, so value-keying is safe; specs are
-    # identity-keyed with the fifo_cached identity guard
+                     ctx: LatencyContext, window: int = 0,
+                     calib=None) -> BatchOracle:
+    # ctx/hw are frozen dataclasses, so value-keying is safe; specs and
+    # calib tables are identity-keyed with the fifo_cached identity guard
     return fifo_cached(
-        _oracle_cache, _ORACLE_CACHE_MAX, (id(specs), hw, ctx, window),
-        lambda o: o.specs is specs,
-        lambda: BatchOracle(specs, hw, ctx, window))
+        _oracle_cache, _ORACLE_CACHE_MAX,
+        (id(specs), hw, ctx, window, id(calib) if calib is not None else None),
+        lambda o: o.specs is specs and o.calib is calib,
+        lambda: BatchOracle(specs, hw, ctx, window, calib))
 
 
 def policy_latency_batch(
         specs: Sequence[LayerSpec],
         policies: Union[PolicyBatch, Sequence[Policy]],
         hw: HardwareTarget = V5E, ctx: Optional[LatencyContext] = None,
-        window: int = 0) -> BatchedPolicyLatency:
+        window: int = 0, calib=None) -> BatchedPolicyLatency:
     """Vectorized ``policy_latency`` over a stack of K policies.
 
     Matches the scalar oracle term-for-term (same roofline formulas in
@@ -474,7 +519,7 @@ def policy_latency_batch(
     ctx = ctx or LatencyContext(tokens=1, seq_ctx=1, mode="decode")
     if not isinstance(policies, PolicyBatch):
         policies = stack_policies(specs, policies)
-    return get_batch_oracle(specs, hw, ctx, window)(policies)
+    return get_batch_oracle(specs, hw, ctx, window, calib)(policies)
 
 
 # ===========================================================================
@@ -516,10 +561,16 @@ class JaxBatchOracle:
     """
 
     def __init__(self, specs: Sequence[LayerSpec], hw: HardwareTarget,
-                 ctx: LatencyContext, window: int = 0):
-        b = get_batch_oracle(specs, hw, ctx, window)
+                 ctx: LatencyContext, window: int = 0, calib=None):
+        b = get_batch_oracle(specs, hw, ctx, window, calib)
         f32 = lambda x: jnp.asarray(x, jnp.float32)
         self.specs, self.hw, self.ctx, self.window = specs, hw, ctx, window
+        # calibration factors bake into the trace as constants: the fused
+        # rollout stays at its single-dispatch bound in calibrated mode
+        self.calib = calib
+        self.calib_f = None if b.calib_f is None else f32(b.calib_f)
+        self.extra_f = float(b.extra_f)
+        self.overhead_f = float(b.overhead_f)
         self.hwp = hw_params(hw)
         self.is_conv = jnp.asarray(b.is_conv)
         self.is_embed = jnp.asarray(b.is_embed)
@@ -606,6 +657,10 @@ class JaxBatchOracle:
                            memory)
         coll = self.coll_base / hwp.ici_bw * n_dim
         unit_time = jnp.maximum(compute, memory) + coll
+        if self.calib_f is not None:
+            bucket = jnp.where(wb >= 9, 0, jnp.where(wb >= 5, 1, 2))
+            unit_time = unit_time * self.calib_f[
+                self.spec_idx[None, :], bucket.astype(jnp.int32)]
 
         if len(self.extra_idx):
             keep_heads = jnp.where(self.extra_prunable,
@@ -615,7 +670,7 @@ class JaxBatchOracle:
                 eflops = eflops * 0.5
             extra = jnp.maximum(
                 eflops / (hwp.peak_bf16 * chips),
-                self.extra_cache_bytes / (hwp.hbm_bw * chips))
+                self.extra_cache_bytes / (hwp.hbm_bw * chips)) * self.extra_f
         else:
             extra = jnp.zeros((keep.shape[0], 0), jnp.float32)
         return unit_time, extra
@@ -624,7 +679,7 @@ class JaxBatchOracle:
                hwp: Optional[HwParams] = None):
         hwp = self.hwp if hwp is None else hwp
         return (unit_time.sum(axis=1) + extra_time.sum(axis=1)
-                + self.n_ops * hwp.op_overhead)
+                + self.n_ops * hwp.op_overhead * self.overhead_f)
 
     def decided_before(self, unit_time, extra_time, t):
         """Per-policy latency of units with spec index < t (traced t) —
@@ -639,12 +694,14 @@ _jax_oracle_cache: dict = {}
 
 
 def get_jax_oracle(specs: Sequence[LayerSpec], hw: HardwareTarget,
-                   ctx: LatencyContext, window: int = 0) -> JaxBatchOracle:
+                   ctx: LatencyContext, window: int = 0,
+                   calib=None) -> JaxBatchOracle:
     """FIFO-evicting cache, same keying rules as ``get_batch_oracle``."""
     return fifo_cached(
-        _jax_oracle_cache, _ORACLE_CACHE_MAX, (id(specs), hw, ctx, window),
-        lambda o: o.specs is specs,
-        lambda: JaxBatchOracle(specs, hw, ctx, window))
+        _jax_oracle_cache, _ORACLE_CACHE_MAX,
+        (id(specs), hw, ctx, window, id(calib) if calib is not None else None),
+        lambda o: o.specs is specs and o.calib is calib,
+        lambda: JaxBatchOracle(specs, hw, ctx, window, calib))
 
 
 # ===========================================================================
@@ -720,10 +777,20 @@ class RooflineReport:
     chips: int
     hw: HardwareTarget
     model_flops: float = 0.0           # 6·N·D-style useful flops (global)
+    compute_dtype: str = "bf16"        # dominant dot/conv operand dtype
+
+    @property
+    def compute_peak(self) -> float:
+        """Per-chip peak for the program's dominant matmul dtype — an
+        int8-quantized program runs the MXU at ``peak_int8``, not
+        ``peak_bf16`` (a 2x-pessimistic compute term would bias the
+        measured-latency calibration)."""
+        return self.hw.peak_int8 if self.compute_dtype == "int8" \
+            else self.hw.peak_bf16
 
     @property
     def compute_s(self) -> float:
-        return self.flops / self.hw.peak_bf16
+        return self.flops / self.compute_peak
 
     @property
     def memory_s(self) -> float:
@@ -768,12 +835,35 @@ class RooflineReport:
             "step_s": self.step_s, "model_flops": self.model_flops,
             "useful_flops_ratio": self.useful_flops_ratio,
             "roofline_fraction": self.roofline_fraction,
+            "compute_dtype": self.compute_dtype,
         }
+
+
+_DOT_RE = re.compile(r"\b(?:dot|convolution)\(")
+_INT_MXU_DTYPES = frozenset(("s8", "u8", "s4", "u4"))
+
+
+def hlo_compute_dtype(hlo_text: str) -> str:
+    """Dominant MXU dtype of an HLO module: ``"int8"`` when any
+    dot/convolution line carries integer (s8/u8/s4/u4) operand or result
+    shapes, ``"bf16"`` otherwise. Operand shapes are not always printed
+    on the instruction line (post-optimization HLO may reference bare
+    ``%operand`` names), so integer shapes anywhere on a dot/conv line —
+    including the convert fusions XLA folds into them — count."""
+    for line in hlo_text.splitlines():
+        if not _DOT_RE.search(line):
+            continue
+        for dt, _ in _SHAPE_RE.findall(line):
+            if dt in _INT_MXU_DTYPES:
+                return "int8"
+    return "bf16"
 
 
 def roofline_from_compiled(compiled, hlo_text: Optional[str] = None,
                            chips: int = 1, hw: HardwareTarget = V5E,
-                           model_flops: float = 0.0) -> RooflineReport:
+                           model_flops: float = 0.0,
+                           compute_dtype: Optional[str] = None
+                           ) -> RooflineReport:
     ca = compiled.cost_analysis()
     if isinstance(ca, (list, tuple)):
         ca = ca[0]
@@ -782,6 +872,9 @@ def roofline_from_compiled(compiled, hlo_text: Optional[str] = None,
     text = hlo_text if hlo_text is not None else compiled.as_text()
     colls = hlo_collective_bytes(text)
     cbytes = sum(v for k, v in colls.items() if not k.startswith("_"))
+    if compute_dtype is None:
+        compute_dtype = hlo_compute_dtype(text)
     return RooflineReport(flops=flops, bytes_accessed=byts,
                           collective_bytes=cbytes, per_collective=colls,
-                          chips=chips, hw=hw, model_flops=model_flops)
+                          chips=chips, hw=hw, model_flops=model_flops,
+                          compute_dtype=compute_dtype)

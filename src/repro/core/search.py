@@ -143,6 +143,15 @@ class SearchConfig:
     seed: int = 0
     window: int = 0                    # attention window for the oracle
     track_bops: bool = True
+    # latency oracle flavor (core/measure.py):
+    #   analytic   — pure roofline (the default, zero measurement deps)
+    #   calibrated — roofline terms rescaled by the fitted per-(kind,
+    #                container) factors; stays fully traced/batched
+    #   measured   — calibrated search + wall-clock re-timing of the
+    #                top-K final candidates (SearchResult.measured)
+    oracle_mode: str = "analytic"
+    calibration_path: str = ""         # "" -> artifacts/latency_calibration.json
+    measure_top_k: int = 3             # distinct candidates re-timed
 
 
 @dataclass
@@ -164,6 +173,9 @@ class SearchResult:
     best: EpisodeRecord
     ref_latency_s: float
     ref_accuracy: float
+    # oracle_mode="measured": wall-clock rows for the top-K candidates
+    # (predicted vs measured seconds and ratios vs the reference model)
+    measured: Optional[List[dict]] = None
 
     def best_under_budget(self, tol: float = 0.05) -> Optional[EpisodeRecord]:
         c = None
@@ -189,13 +201,24 @@ class CompressionSearch:
     def __init__(self, cmodel, val_batch, search_cfg: SearchConfig,
                  ctx: LatencyContext, hw: HardwareTarget = V5E,
                  sens: Optional[SensitivityResult] = None,
-                 calib_batch=None):
+                 calib_batch=None, calib=None):
         self.cmodel = cmodel
         self.specs = cmodel.specs
         self.cfg = search_cfg
         self.hw = hw
         self.ctx = ctx
         self.val_batch = val_batch
+        # latency-oracle flavor: a CalibrationTable rescales every oracle
+        # form's terms in calibrated/measured mode; analytic ignores it
+        mode = search_cfg.oracle_mode
+        if mode not in ("analytic", "calibrated", "measured"):
+            raise ValueError(
+                f"SearchConfig.oracle_mode must be analytic|calibrated|"
+                f"measured, got {mode!r}")
+        if mode != "analytic" and calib is None:
+            from repro.core.measure import load_calibration
+            calib = load_calibration(search_cfg.calibration_path or None)
+        self.calib = calib if mode != "analytic" else None
         native = n_actions(search_cfg.methods)
         ddpg_cfg = search_cfg.ddpg or DDPGConfig(
             state_dim=state_dim(native), action_dim=native)
@@ -219,7 +242,7 @@ class CompressionSearch:
         self._jit_acc = jax.jit(lambda cs: cmodel.accuracy(val_batch, cs))
         self.ref_policy = Policy.reference(self.specs)
         self.ref_lat = policy_latency(self.specs, self.ref_policy, hw, ctx,
-                                      search_cfg.window)
+                                      search_cfg.window, calib=self.calib)
         self.ref_acc = float(self._jit_acc(
             cmodel.build_cspec(self.ref_policy)))
         self.steps = [i for i, s in enumerate(self.specs)
@@ -272,7 +295,7 @@ class CompressionSearch:
         cspec = self.cmodel.build_cspec(policy)
         acc = float(self._jit_acc(cspec))
         lat = policy_latency(self.specs, policy, self.hw, self.ctx,
-                             cfg.window)
+                             cfg.window, calib=self.calib)
         reward = compute_reward(cfg.reward, acc, lat.total_s,
                                 self.ref_lat.total_s)
         # push transitions — one shared episode reward (paper §Schema),
@@ -325,9 +348,35 @@ class CompressionSearch:
                           f"lat_ratio={rec.latency_ratio:.3f} "
                           f"sigma={rec.sigma:.3f}")
             e += k
-        return SearchResult(history=history, best=best,
-                            ref_latency_s=self.ref_lat.total_s,
-                            ref_accuracy=self.ref_acc)
+        result = SearchResult(history=history, best=best,
+                              ref_latency_s=self.ref_lat.total_s,
+                              ref_accuracy=self.ref_acc)
+        if self.cfg.oracle_mode == "measured":
+            result.measured = self._measure_top_k(history)
+        return result
+
+    def _measure_top_k(self, history: List[EpisodeRecord]) -> List[dict]:
+        """Wall-clock the deployed forward of the top-K candidates (the
+        paper's measure-on-target step, applied only to finalists). The
+        measurement memo is FIFO-cached by container signature, so
+        candidates sharing a deployment are timed once."""
+        from repro.core import measure
+        k = max(1, self.cfg.measure_top_k)
+        top = sorted(history, key=lambda r: r.reward, reverse=True)[:k]
+        ref_s = measure.measure_policy(self.cmodel, self.ref_policy,
+                                       self.val_batch)
+        rows = []
+        for r in top:
+            t = measure.measure_policy(self.cmodel, r.policy,
+                                       self.val_batch)
+            rows.append({
+                "episode": r.episode, "reward": r.reward,
+                "predicted_s": r.latency_s,
+                "predicted_ratio": r.latency_s / self.ref_lat.total_s,
+                "measured_s": t, "measured_ref_s": ref_s,
+                "measured_ratio": t / ref_s if ref_s > 0 else float("inf"),
+            })
+        return rows
 
 
 class BatchedCompressionSearch(CompressionSearch):
@@ -341,9 +390,9 @@ class BatchedCompressionSearch(CompressionSearch):
     def __init__(self, cmodel, val_batch, search_cfg: SearchConfig,
                  ctx: LatencyContext, hw: HardwareTarget = V5E,
                  sens: Optional[SensitivityResult] = None,
-                 calib_batch=None, batch_size: int = 8):
+                 calib_batch=None, calib=None, batch_size: int = 8):
         super().__init__(cmodel, val_batch, search_cfg, ctx, hw=hw,
-                         sens=sens, calib_batch=calib_batch)
+                         sens=sens, calib_batch=calib_batch, calib=calib)
         self.batch_size = max(1, batch_size)
 
     # ------------------------------------------------------------------
@@ -371,7 +420,7 @@ class BatchedCompressionSearch(CompressionSearch):
         step_states, step_actions = [], []
         for t in self.steps:
             cur = policy_latency_batch(self.specs, pb, self.hw, self.ctx,
-                                       cfg.window)
+                                       cfg.window, calib=self.calib)
             S = build_state_batch(self.specs, t, cur, self.sens, prev_a,
                                   self.ref_lat)
             A = self.agent.act_batch(S, sigmas, warmup)
@@ -395,7 +444,7 @@ class BatchedCompressionSearch(CompressionSearch):
         accs = np.asarray(
             self.cmodel.accuracy_policy_batch(self.val_batch, pb))
         lats = policy_latency_batch(self.specs, pb, self.hw, self.ctx,
-                                    cfg.window).total_s
+                                    cfg.window, calib=self.calib).total_s
         rewards = compute_reward_batch(cfg.reward, accs, lats,
                                        self.ref_lat.total_s, xp=np)
         return self._push_and_record(
@@ -712,12 +761,15 @@ class FusedCompressionSearch(BatchedCompressionSearch):
     def __init__(self, cmodel, val_batch, search_cfg: SearchConfig,
                  ctx: LatencyContext, hw: HardwareTarget = V5E,
                  sens: Optional[SensitivityResult] = None,
-                 calib_batch=None, batch_size: int = 8,
+                 calib_batch=None, calib=None, batch_size: int = 8,
                  epoch_batches: int = 0):
         super().__init__(cmodel, val_batch, search_cfg, ctx, hw=hw,
-                         sens=sens, calib_batch=calib_batch,
+                         sens=sens, calib_batch=calib_batch, calib=calib,
                          batch_size=batch_size)
-        self.oracle = get_jax_oracle(self.specs, hw, ctx, search_cfg.window)
+        # calibration factors enter the traced oracle as constants —
+        # calibrated mode keeps the rollout at its 1-dispatch bound
+        self.oracle = get_jax_oracle(self.specs, hw, ctx, search_cfg.window,
+                                     calib=self.calib)
         self.tables = StateTables(self.specs, self.steps, self.sens,
                                   self.ref_lat)
         ref_pb = stack_policies(self.specs, [self.ref_policy])
@@ -1001,6 +1053,7 @@ class PopulationSearch:
                     and m.cfg.window == m0.cfg.window
                     and m.cfg.methods == m0.cfg.methods
                     and m.hw.mxu_align == m0.hw.mxu_align
+                    and m.calib is m0.calib
                     for m in ms[1:])
         return self._fusable
 

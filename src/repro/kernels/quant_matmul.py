@@ -5,9 +5,12 @@ Two entry kernels:
 
 * ``int8_matmul_kernel``   — int8 x int8 -> int32 on the MXU with fused
   asymmetric dequantization (per-row activation scale/zero, per-column
-  weight scale/zero):
-      y[m,n] = sx[m]·sw[n]·(acc[m,n] − zx[m]·Σ_k wq[k,n]
-                            − zw[n]·Σ_k xq[m,k] + K·zx[m]·zw[n])
+  weight scale/zero). Convention: zero offsets are ADDED back on
+  dequantization, x = sx·(xq + zx) and w = sw·(wq + zw), so
+      y[m,n] = sx[m]·sw[n]·(acc[m,n] + zx[m]·Σ_k wq[k,n]
+                            + zw[n]·Σ_k xq[m,k] + K·zx[m]·zw[n])
+  (matches ``_dequant_epilogue`` and ``ref.int8_matmul_ref``; locked by
+  the asymmetric zero-point test in tests/test_kernels.py).
 * ``int4_matmul_kernel``   — weights stored packed two-per-byte (the MIX
   ≤4-bit policy path); unpacked in-VMEM, then the same int8 MXU pipeline.
   The win is HBM/ICI traffic (half of int8), not FLOPs — exactly the

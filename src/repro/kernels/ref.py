@@ -15,8 +15,9 @@ import jax.numpy as jnp
 
 def quantize_rows(x: jnp.ndarray, bits: int = 8):
     """Asymmetric per-row quantization -> (q int8, scale [R], zero [R]).
-    Convention matches the kernel: x ≈ sx * (q_signed + z_corrected) via
-    x = s*(q - z_off) with q in signed range."""
+    Convention matches the kernel epilogue: the zero offset is ADDED back
+    on dequantization, x ≈ s·(q + z), with q in the signed range (q is
+    computed as round(x/s) − z, so the z's cancel on the round trip)."""
     n = 2.0 ** bits - 1.0
     x = x.astype(jnp.float32)
     x_min = jnp.min(x, axis=1)

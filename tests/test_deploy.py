@@ -97,6 +97,42 @@ def test_odd_contraction_dim():
     assert "w" in qp["lin"] and "w_p" not in qp["lin"]
 
 
+def test_raw_named_odd_contraction():
+    """Regression: the raw-names branch used the even-K guard for EVERY
+    bit width, so an odd-contraction named weight (e.g. a 5-row MoE
+    up-projection) silently stayed f32 even at int8 — the deployed
+    model ran a different program than the policy claimed. int8 needs
+    no packing and must deploy; int4 genuinely can't pack odd K and
+    must stay raw."""
+    w = jax.random.normal(jax.random.PRNGKey(13), (5, 4))
+    qp8 = quantize_params_for_deploy({"moe": {"w_up": w}}, 8)
+    assert "w_q" in qp8["moe"]["w_up"]
+    qp4 = quantize_params_for_deploy({"moe": {"w_up": w}}, 4)
+    assert qp4["moe"]["w_up"] is not None
+    assert not isinstance(qp4["moe"]["w_up"], dict)   # stayed raw
+
+
+def test_bits_for_per_name_deploy(params):
+    """``bits_for`` deploys mixed containers per weight name: >8 or
+    None keeps raw, 8 gets the int8 container, 4 the packed one."""
+    widths = {"wq": 4, "wk": 4, "wv": 4, "wo": 8, "w_up": 8,
+              "w_gate": 8, "w_down": 4, "embed": 8}
+    qp = quantize_params_for_deploy(params, bits_for=widths.get)
+    blocks = qp["blocks"]
+    assert "w_p" in blocks["attn"]["wq"]
+    assert "w_q" in blocks["attn"]["wo"]
+    assert "w_q" in qp["embed"]
+    assert "w_q" in blocks["mlp"]["w_up"]
+    assert "w_p" in blocks["mlp"]["w_down"]
+    # unnamed widths (unembed, norms) stay raw
+    assert not isinstance(qp["unembed"], dict)
+    toks = jax.random.randint(jax.random.PRNGKey(14), (2, 16), 0, 128)
+    base = M.forward(CFG, params, tokens=toks)
+    out = M.forward(CFG, qp, tokens=toks)
+    rel = float(jnp.linalg.norm(out - base) / jnp.linalg.norm(base))
+    assert rel < 0.6
+
+
 @pytest.mark.parametrize("bits,max_rel,max_ratio", [(8, 0.1, 0.30),
                                                     (4, 0.6, 0.17)])
 def test_deployed_forward(params, bits, max_rel, max_ratio):

@@ -63,6 +63,87 @@ def test_quant_matmul_block_shapes():
                                    atol=1e-3)
 
 
+def test_asymmetric_zero_point_convention():
+    """Locks the ADD convention x = s·(q + z) end to end: strongly
+    shifted (non-zero-mean) data makes the zero-point correction terms
+    large, so any sign error in the epilogue is a gross miss. Kernel,
+    integer-accumulation ref and dequantize-then-matmul ground truth
+    must all agree, and all must approximate the f32 matmul."""
+    M, K, N = 64, 128, 96
+    x = jax.random.normal(jax.random.PRNGKey(20), (M, K)) + 3.0
+    w = jax.random.normal(jax.random.PRNGKey(21), (K, N)) - 1.0
+    xq, sx, zx = ref.quantize_rows(x, 8)
+    wq, sw, zw = ref.quantize_cols(w, 8)
+    want = ref.dequant_matmul_ref(xq, wq, sx, zx, sw, zw)
+    got_ref = ref.int8_matmul_ref(xq, wq, sx, zx, sw, zw)
+    got_kern = quant_matmul(xq, wq, sx, zx, sw, zw, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want),
+                               rtol=1e-3, atol=0.1)
+    np.testing.assert_allclose(np.asarray(got_kern), np.asarray(want),
+                               rtol=1e-3, atol=0.1)
+    fp = x @ w
+    rel = float(jnp.linalg.norm(want - fp) / jnp.linalg.norm(fp))
+    assert rel < 0.03
+    # the test has teeth: SUBTRACT-convention zero points miss badly
+    wrong = ref.int8_matmul_ref(xq, wq, sx, -zx, sw, -zw)
+    rel_wrong = float(jnp.linalg.norm(wrong - fp) / jnp.linalg.norm(fp))
+    assert rel_wrong > 10 * rel
+
+
+@pytest.mark.parametrize("M,K,N", [(64, 128, 64), (32, 256, 96)])
+def test_quant_matmul_packed_matches_ref(M, K, N):
+    """packed=True consumes ``ref.pack_int4`` nibbles and must equal the
+    dequantize-then-matmul ground truth of the unpacked codes (tight),
+    and stay within int4 noise of the f32 matmul (loose)."""
+    x = jax.random.normal(jax.random.PRNGKey(M + 40), (M, K))
+    w = jax.random.normal(jax.random.PRNGKey(N + 41), (K, N))
+    xq, sx, zx = ref.quantize_rows(x, 8)
+    wq, sw, zw = ref.quantize_cols(w, 4)
+    y = quant_matmul(xq, ref.pack_int4(wq), sx, zx, sw, zw,
+                     packed=True, interpret=True)
+    want = ref.dequant_matmul_ref(xq, wq, sx, zx, sw, zw)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-3, atol=0.1)
+    fp = x @ w
+    rel = float(jnp.linalg.norm(y - fp) / jnp.linalg.norm(fp))
+    assert rel < 0.2
+
+
+def test_quant_matmul_packed_k_true():
+    """Zero-padding K must not corrupt the K·zx·zw zero-point term:
+    with ``k_true`` the padded kernel reproduces the unpadded ground
+    truth exactly (padded q codes contribute nothing to acc or the
+    row/col sums; only the K count needs correcting)."""
+    M, K_true, K, N = 32, 300, 512, 64
+    x = jax.random.normal(jax.random.PRNGKey(50), (M, K_true)) + 1.0
+    w = jax.random.normal(jax.random.PRNGKey(51), (K_true, N))
+    xq, sx, zx = ref.quantize_rows(x, 8)
+    wq, sw, zw = ref.quantize_cols(w, 4)
+    want = ref.dequant_matmul_ref(xq, wq, sx, zx, sw, zw)
+    xq_p = jnp.zeros((M, K), jnp.int8).at[:, :K_true].set(xq)
+    wq_p = jnp.zeros((K, N), jnp.int8).at[:K_true].set(wq)
+    y = quant_matmul(xq_p, ref.pack_int4(wq_p), sx, zx, sw, zw,
+                     packed=True, k_true=K_true, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-3, atol=0.1)
+    # without the correction the padded run is measurably off
+    y_bad = quant_matmul(xq_p, ref.pack_int4(wq_p), sx, zx, sw, zw,
+                         packed=True, interpret=True)
+    assert float(jnp.max(jnp.abs(y_bad - want))) > 1.0
+
+
+def test_unpack_variants_agree():
+    """The kernel-side, deploy-side and ref unpackers share one nibble
+    layout (low nibble = even row) — all three invert ``pack_int4``."""
+    from repro.core.deploy import unpack_int4_weight
+    from repro.kernels.quant_matmul import unpack_int4
+    w4 = jax.random.randint(jax.random.PRNGKey(7), (64, 32), -8, 8) \
+        .astype(jnp.int8)
+    packed = ref.pack_int4(w4)
+    for fn in (unpack_int4, unpack_int4_weight, ref.unpack_int4_ref):
+        assert bool(jnp.all(fn(packed) == w4)), fn.__name__
+
+
 # --------------------------- fake quant ------------------------------------
 
 @pytest.mark.parametrize("shape", [(64, 32), (128, 100), (7, 257)])

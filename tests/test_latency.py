@@ -86,3 +86,62 @@ def test_hlo_collective_parse():
     assert out["collective-permute"] == 16
     assert out["all-to-all"] == 64
     assert out["_counts"]["all-reduce"] == 2
+
+
+DOT_HLO_INT8 = """
+ENTRY %main {
+  %d = s32[64,64]{1,0} dot(s8[64,128]{1,0} %x, s8[128,64]{1,0} %w),
+    lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %u = f32[64,64]{1,0} convert(s32[64,64]{1,0} %d)
+}
+"""
+
+DOT_HLO_BF16 = """
+ENTRY %main {
+  %d = f32[64,64]{1,0} dot(bf16[64,128]{1,0} %x, bf16[128,64]{1,0} %w),
+    lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_hlo_compute_dtype():
+    from repro.core.latency import hlo_compute_dtype
+    assert hlo_compute_dtype(DOT_HLO_INT8) == "int8"
+    assert hlo_compute_dtype(DOT_HLO_BF16) == "bf16"
+    assert hlo_compute_dtype("ENTRY %main { %z = f32[4]{0} add(...) }") \
+        == "bf16"
+
+
+def test_roofline_compute_dtype_peak():
+    """An int8-dominant program's compute term divides by peak_int8 —
+    the bf16 peak would overstate the compute floor 2x and bias the
+    measured-latency calibration."""
+    from repro.core.latency import RooflineReport
+    kw = dict(flops=1e12, bytes_accessed=0.0, collective_bytes=0.0,
+              per_collective={}, chips=1, hw=V5E)
+    bf = RooflineReport(**kw)
+    i8 = RooflineReport(compute_dtype="int8", **kw)
+    assert bf.compute_peak == V5E.peak_bf16
+    assert i8.compute_peak == V5E.peak_int8
+    assert i8.compute_s < bf.compute_s
+    assert i8.summary()["compute_dtype"] == "int8"
+
+
+def test_roofline_from_compiled_dtype_paths():
+    """Detection runs on the supplied HLO text (CPU XLA promotes s8 dot
+    operands to s32 pre-dot, so only TPU HLO shows integer dots — the
+    text/override paths are the backend-independent contract), and an
+    explicit ``compute_dtype=`` always wins."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.latency import roofline_from_compiled
+
+    fx = jnp.ones((64, 128), jnp.float32)
+    fw = jnp.ones((128, 64), jnp.float32)
+    compiled = jax.jit(lambda a, b: a @ b).lower(fx, fw).compile()
+    assert roofline_from_compiled(compiled).compute_dtype == "bf16"
+    rep = roofline_from_compiled(compiled, hlo_text=DOT_HLO_INT8)
+    assert rep.compute_dtype == "int8"
+    rep = roofline_from_compiled(compiled, compute_dtype="int8")
+    assert rep.compute_dtype == "int8"
+    assert rep.compute_peak == V5E.peak_int8
