@@ -39,26 +39,39 @@ import sys
 KEY_FIELDS = ("table", "engine", "members", "batch_size",
               "updates_per_episode")
 METRICS = ("eps_per_s", "independent_eps_per_s", "population_eps_per_s",
-           "runs_per_s")
+           "runs_per_s", "ms_per_update", "serve_tok_per_s")
+# latency-type metrics: a REGRESSION is the value going UP
+LOWER_IS_BETTER = frozenset({"ms_per_update"})
 
 
 def row_key(row: dict) -> tuple:
     return tuple(json.dumps(row.get(f)) for f in KEY_FIELDS)
 
 
-def check(current: list, baseline: list, tol: float):
-    """(checked metric count, failure strings)."""
+def check(current: list, baseline: list, tol: float, metric: str = ""):
+    """(checked metric count, failure strings). ``metric`` restricts the
+    gate to one metric name (e.g. ``ms_per_update``)."""
     base = {row_key(r): r for r in baseline}
+    metrics = (metric,) if metric else METRICS
     checked, failures = 0, []
     for row in current:
         b = base.get(row_key(row))
         if b is None:
             continue
-        for m in METRICS:
+        for m in metrics:
             if m not in row or m not in b or not b[m] > 0:
                 continue
             checked += 1
-            if row[m] < (1.0 - tol) * b[m]:
+            if m in LOWER_IS_BETTER:
+                if row[m] > (1.0 + tol) * b[m]:
+                    ident = {f: row.get(f) for f in KEY_FIELDS
+                             if row.get(f) is not None}
+                    failures.append(
+                        f"{ident}: {m} {row[m]:.2f} > "
+                        f"{(1.0 + tol) * b[m]:.2f} "
+                        f"(baseline {b[m]:.2f}, tol {tol:.0%}, "
+                        f"lower is better)")
+            elif row[m] < (1.0 - tol) * b[m]:
                 ident = {f: row.get(f) for f in KEY_FIELDS
                          if row.get(f) is not None}
                 failures.append(
@@ -117,6 +130,9 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default="artifacts/bench_baseline.json")
     ap.add_argument("--tol", type=float, default=0.2,
                     help="allowed fractional regression (default 0.2)")
+    ap.add_argument("--metric", default="",
+                    help="gate only this metric (e.g. ms_per_update; "
+                         "lower-is-better metrics invert the check)")
     ap.add_argument("--calib-current", default="",
                     help="fresh calibrate_oracle artifact to drift-check")
     ap.add_argument("--calib-baseline",
@@ -132,7 +148,8 @@ def main(argv=None) -> int:
             current = json.load(f)
         with open(args.baseline) as f:
             baseline = json.load(f)
-        checked, failures = check(current, baseline, args.tol)
+        checked, failures = check(current, baseline, args.tol,
+                                  metric=args.metric)
     if args.calib_current:
         with open(args.calib_current) as f:
             ccur = json.load(f)

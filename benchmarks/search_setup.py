@@ -570,10 +570,208 @@ def population_comparison(batch_size: int = 8, episodes: int = 32,
     return out
 
 
+# ===========================================================================
+# Update floor: vmap reference vs megabatched population chunks (ISSUE 7)
+# ===========================================================================
+
+def _paper_population(P: int, seed: int = 0):
+    """P paper-sized agents ((400, 300) hidden, batch 128) with filled
+    device replays — the exact update workload PopulationSearch
+    dispatches."""
+    import jax
+    import numpy as np
+    from repro.core.ddpg import agent_init, tree_stack
+    from repro.core.replay import DeviceReplay
+    cfg = DDPGConfig(state_dim=10, action_dim=3, batch_size=128,
+                     buffer_size=2000)
+    rng = np.random.default_rng(seed)
+    states, replays = [], []
+    for p in range(P):
+        states.append(agent_init(cfg, jax.random.PRNGKey(seed + p)))
+        rep = DeviceReplay(cfg.buffer_size, cfg.state_dim, cfg.action_dim)
+        n = 600
+        rep.push_batch(
+            rng.standard_normal((n, cfg.state_dim)).astype(np.float32),
+            rng.uniform(size=(n, cfg.action_dim)).astype(np.float32),
+            rng.standard_normal(n).astype(np.float32),
+            rng.standard_normal((n, cfg.state_dim)).astype(np.float32),
+            rng.integers(0, 2, n).astype(np.float32))
+        replays.append(rep.data)
+    return cfg, tree_stack(states), tree_stack(replays)
+
+
+def _print_update_gemm_shapes(cfg, P: int):
+    """The GEMM shapes each path dispatches per scan step — so floor
+    regressions are diagnosable from the benchmark log alone."""
+    B = cfg.batch_size
+    h1, h2 = cfg.hidden
+    S, A = cfg.state_dim, cfg.action_dim
+    critic = [(S + A, h1), (h1, h2), (h2, 1)]
+    actor = [(S, h1), (h1, h2), (h2, A)]
+    print(f"  [shapes] P={P} B={B}: per-layer GEMMs (fwd) "
+          + " ".join(f"({P},{B},{i})x({P},{i},{o})"
+                     for i, o in critic + actor)
+          + f"; bwd dW einsum pbi,pbo->pio, dx einsum pbo,pio->pbi; "
+          f"both paths batch over P (vmap via batched dot_general, "
+          f"megabatch explicitly)", flush=True)
+
+
+@contextmanager
+def megabatch_dispatch_probe():
+    """Compile-counter hook for the population update path: counts REAL
+    invocations of the megabatched compiled entries (plain + donating)
+    and plants canaries on the vmap population jit and the per-member
+    update-chunk jit — a silent fallback to either is caught."""
+    import repro.core.ddpg as ddpg_mod
+    counts = {"mega": 0, "vmap": 0, "member": 0}
+    names = {"_population_update_chunk_mega_jit": "mega",
+             "_population_update_chunk_mega_donate_jit": "mega",
+             "_population_update_chunk_jit": "vmap",
+             "_update_chunk_jit": "member"}
+    saved = {}
+
+    def wrap(name, key):
+        fn = getattr(ddpg_mod, name)
+        saved[name] = fn
+
+        def counting(*a, **kw):
+            counts[key] += 1
+            return fn(*a, **kw)
+
+        setattr(ddpg_mod, name, counting)
+
+    for name, key in names.items():
+        wrap(name, key)
+    try:
+        yield counts
+    finally:
+        for name, fn in saved.items():
+            setattr(ddpg_mod, name, fn)
+
+
+def assert_megabatch_dispatch_count(cfg, states, replays, n: int) -> dict:
+    """One routed population chunk must be exactly ONE execution of the
+    megabatched compiled entry — never the vmap reference or P
+    per-member chunks. Runs in the weekly job; a regression fails it."""
+    from repro.core.ddpg import population_update_chunk
+    population_update_chunk(cfg, states, replays, n)    # compile outside
+    with megabatch_dispatch_probe() as counts:
+        population_update_chunk(cfg, states, replays, n)
+    assert counts["mega"] == 1, \
+        f"population chunk made {counts['mega']} megabatch executions: " \
+        f"{counts}"
+    assert counts["vmap"] == 0 and counts["member"] == 0, \
+        f"population chunk fell back off the megabatched path: {counts}"
+    return counts
+
+
+def update_floor_comparison(pops=(1, 4, 16), updates: int = 8,
+                            repeats: int = 5, verbose: bool = True) -> list:
+    """ms/update of the DDPG population chunk, vmap reference vs the
+    megabatched path, at P member counts. Best-of-N interleaved
+    round-robin (box drift hits both arms equally); the megabatched arm
+    runs the production donating entry, so each rep feeds it a fresh
+    copy of the stacked states (copies made OUTSIDE the timed region).
+
+    ``ms_per_update`` is wall ms per scan step (all P members advance
+    one update); ``ms_per_member_update`` divides by P."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.ddpg import (population_update_chunk_megabatched,
+                                 population_update_chunk_vmap)
+    rows = []
+    for P in pops:
+        cfg, states, replays = _paper_population(P)
+        if verbose:
+            _print_update_gemm_shapes(cfg, P)
+        copy = lambda: jax.tree.map(jnp.copy, states)
+        arms = {
+            "vmap": lambda s: population_update_chunk_vmap(
+                cfg, s, replays, updates),
+            "megabatch": lambda s: population_update_chunk_megabatched(
+                cfg, s, replays, updates, donate=True),
+        }
+        for fn in arms.values():
+            jax.block_until_ready(fn(copy())[0])        # warm the jits
+        best = {name: float("inf") for name in arms}
+        for _ in range(repeats):
+            for name, fn in arms.items():
+                s = copy()
+                jax.block_until_ready(s)
+                t0 = time.perf_counter()
+                out, _ = fn(s)
+                jax.block_until_ready(out)
+                best[name] = min(best[name], time.perf_counter() - t0)
+        counts = assert_megabatch_dispatch_count(
+            cfg, copy(), replays, updates)
+        for name in arms:
+            ms = best[name] * 1000.0 / updates
+            row = {"table": "update_floor", "engine": name, "members": P,
+                   "batch_size": cfg.batch_size,
+                   "updates_per_episode": updates,
+                   "ms_per_update": round(ms, 3),
+                   "ms_per_member_update": round(ms / P, 3)}
+            if name == "megabatch":
+                row["dispatches_per_chunk"] = counts["mega"]
+                row["speedup_vs_vmap"] = round(
+                    best["vmap"] / best["megabatch"], 3)
+            rows.append(row)
+        if verbose:
+            print(f"[update_floor] P={P} n={updates}: "
+                  f"vmap {best['vmap'] * 1000 / updates:.2f} ms/update, "
+                  f"megabatch {best['megabatch'] * 1000 / updates:.2f} "
+                  f"ms/update -> "
+                  f"{best['vmap'] / best['megabatch']:.2f}x", flush=True)
+    return rows
+
+
+# ===========================================================================
+# Serving throughput of the deployed compressed model (ISSUE 7)
+# ===========================================================================
+
+def serve_throughput_rows(batch: int = 4, steps: int = 32,
+                          requests: int = 4, verbose: bool = True) -> list:
+    """tokens/s the deployed tiny LM sustains under back-to-back batched
+    decode requests, for uniform INT8 and INT4-weight policies — the
+    end-to-end number the whole compression pipeline is for. Gated
+    weekly (``serve_tok_per_s``, higher is better)."""
+    from repro.core.policy import Policy
+    from repro.core.spec import LayerCMP
+    from repro.launch.serve import sustained_throughput
+    cm, _ = _tiny_testbed()
+    cfg = cm.cfg
+    policies = {
+        "serve_int8": Policy([LayerCMP(keep=s.prune_dim, mode="INT8",
+                                       w_bits=8, a_bits=8)
+                              for s in cm.specs]),
+        "serve_int4": Policy([LayerCMP(keep=s.prune_dim, mode="MIX",
+                                       w_bits=4, a_bits=8)
+                              for s in cm.specs]),
+    }
+    rows = []
+    for name, pol in policies.items():
+        cspec = cm.build_cspec(pol)
+        tok_s, times = sustained_throughput(
+            cfg, cm.params, batch, steps, max_len=steps + 8, cspec=cspec,
+            requests=requests)
+        rows.append({"table": "serve", "engine": name,
+                     "batch_size": batch, "steps": steps,
+                     "requests": requests,
+                     "serve_tok_per_s": round(tok_s, 1)})
+        if verbose:
+            print(f"[serve] {name}: {requests} requests x {batch}x{steps} "
+                  f"tokens -> {tok_s:.1f} tok/s "
+                  f"(per-request {min(times):.3f}-{max(times):.3f}s)",
+                  flush=True)
+    return rows
+
+
 def main(out: str = "artifacts/bench_engine.json"):
     rows = (engine_comparison(updates=0) + engine_comparison(updates=8)
             + [calibrated_fused_row(), population_comparison()]
-            + sensitivity_comparison())
+            + sensitivity_comparison()
+            + update_floor_comparison()
+            + serve_throughput_rows())
     os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
         json.dump(rows, f, indent=1)

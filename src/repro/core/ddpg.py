@@ -37,6 +37,7 @@ are synced into the pytree right before each fused dispatch.
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass
 from functools import partial
 from typing import NamedTuple, Tuple
@@ -46,6 +47,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.replay import DeviceReplayData, device_replay_sample
+
+_mlp_ops = None         # lazy kernels.ops handle (kernel package must not
+                        # load at agent-import; mirrors core.quantization)
 
 
 @dataclass(frozen=True)
@@ -77,7 +81,33 @@ def _mlp_init(key, dims, final_scale=3e-3):
     return params
 
 
+def _mlp_kernel_route(params, x, final_act) -> bool:
+    """True when this MLP forward should run through the fused Pallas
+    kernel (``kernels.ops.fused_mlp3``): the kernel implements exactly
+    the paper's 3-layer trunk on a 2D batch with a linear or sigmoid
+    head, and only a TPU backend compiles it to Mosaic — everywhere else
+    the reference jnp chain stays the default. ``GALEN_MLP_KERNEL=1``
+    forces the kernel (interpreted off-TPU, for parity tests);
+    ``GALEN_MLP_KERNEL=0`` forces the reference path even on TPU. The
+    route is resolved at trace time, mirroring ``GALEN_FQ_KERNEL``."""
+    if len(params) != 3 or x.ndim != 2:
+        return False
+    if final_act is not None and final_act is not jax.nn.sigmoid:
+        return False
+    v = os.environ.get("GALEN_MLP_KERNEL")
+    if v is not None:
+        return v == "1"
+    return jax.default_backend() == "tpu"
+
+
 def _mlp(params, x, final_act=None):
+    if _mlp_kernel_route(params, x, final_act):
+        global _mlp_ops
+        if _mlp_ops is None:
+            from repro.kernels import ops
+            _mlp_ops = ops
+        final = "sigmoid" if final_act is jax.nn.sigmoid else "linear"
+        return _mlp_ops.fused_mlp3(params, x, final=final)
     for i, layer in enumerate(params):
         x = x @ layer["w"] + layer["b"]
         if i < len(params) - 1:
@@ -122,6 +152,23 @@ def adam_step(params, grads, st, lr, b1=0.9, b2=0.999, eps=1e-8):
     params = jax.tree.map(lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps),
                           params, mh, vh)
     return params, {"m": m, "v": v, "t": t}
+
+
+def polyak_update(target, online, tau):
+    """Soft-target update ``(1 - tau) * target + tau * online``. Routed
+    like ``_mlp``: the flat single-pass Pallas kernel on TPU (or under
+    ``GALEN_MLP_KERNEL=1``), the per-leaf tree map everywhere else."""
+    v = os.environ.get("GALEN_MLP_KERNEL")
+    use_kernel = v == "1" if v is not None \
+        else jax.default_backend() == "tpu"
+    if use_kernel:
+        global _mlp_ops
+        if _mlp_ops is None:
+            from repro.kernels import ops
+            _mlp_ops = ops
+        return _mlp_ops.fused_polyak(target, online, tau)
+    return jax.tree.map(lambda t, p: (1 - tau) * t + tau * p,
+                        target, online)
 
 
 @dataclass
@@ -272,10 +319,8 @@ def ddpg_step(cfg: DDPGConfig, actor, critic, t_actor, t_critic,
     la, ga = jax.value_and_grad(actor_loss)(actor)
     actor, opt_a = adam_step(actor, ga, opt_a, cfg.actor_lr)
 
-    t_actor = jax.tree.map(
-        lambda t, p: (1 - cfg.tau) * t + cfg.tau * p, t_actor, actor)
-    t_critic = jax.tree.map(
-        lambda t, p: (1 - cfg.tau) * t + cfg.tau * p, t_critic, critic)
+    t_actor = polyak_update(t_actor, actor, cfg.tau)
+    t_critic = polyak_update(t_critic, critic, cfg.tau)
     return actor, critic, t_actor, t_critic, opt_a, opt_c, lc, la
 
 
@@ -344,14 +389,250 @@ def _population_update_chunk_jit(cfg, sts, replays, n):
     return jax.vmap(lambda s, r: update_chunk(cfg, s, r, n))(sts, replays)
 
 
-def population_update_chunk(cfg: DDPGConfig, states: AgentState,
-                            replays: DeviceReplayData, n: int):
+def population_update_chunk_vmap(cfg: DDPGConfig, states: AgentState,
+                                 replays: DeviceReplayData, n: int):
     """``jit(vmap(update_chunk))`` over P stacked agent states and
-    buffers: the whole population's ``n × P`` updates are one dispatch.
+    buffers — the parity REFERENCE for the megabatched path below.
 
     ``states``/``replays`` are pytrees whose leaves carry a leading
     population axis (see ``tree_stack``)."""
     return _population_update_chunk_jit(cfg, states, replays, n)
+
+
+# ===========================================================================
+# Megabatched population updates (ISSUE 7 tentpole)
+# ===========================================================================
+#
+# The vmap path above turns every per-member op into a (P, ...)-batched op,
+# but leaves the autodiff-materialized residual traffic, the tree-form Adam
+# (two extra full-tree passes for bias correction), separate Polyak passes,
+# and non-donated carries in the program. The megabatched path below writes
+# the SAME update step (bit-compatible to ~1e-7) with the population axis
+# folded into every GEMM's batch dimension explicitly and the overhead
+# structurally removed:
+#
+#   * merged forwards — the target-actor/target-critic/critic chains run as
+#     (P·B)-row batched GEMMs via broadcasted ``jnp.matmul``/``einsum``;
+#   * a hand-written backward: only the cotangents DDPG needs are formed
+#     (no input-gradient for data tensors; the actor-loss first critic
+#     layer is split ``[s, pi] @ W1 = s @ W1[:S] + pi @ W1[S:]`` so the
+#     backward computes action-column input grads only);
+#   * backward GEMMs in ``einsum`` layout (measured faster than the
+#     swapaxes-matmul forms XLA autodiff emits on CPU);
+#   * Adam with the bias correction folded into per-step scalars
+#     (lr_t = lr·sqrt(1-b2^t)/(1-b1^t), eps_t = eps·sqrt(1-b2^t) — exact
+#     rewrite, no mh/vh tree materialization) fused with the Polyak EMA
+#     into ONE tree pass;
+#   * an optional donated entry point so the carried (P, D) parameter /
+#     moment buffers update in place.
+#
+# On MXU-class backends folding P into the GEMM batch axis is where the
+# wall-clock win comes from; on the 1-core CI box the vmapped GEMMs already
+# run at the machine's measured ~140 GF/s peak, so the gain there is the
+# removed overhead only (see benchmarks/search_setup.py update_floor rows).
+
+
+def _fused_adam_polyak(params, grads, st, target, lr, tau,
+                       b1=0.9, b2=0.999, eps=1e-8):
+    """Adam (folded bias correction) + Polyak target EMA in one tree
+    pass over stacked (P, ...) leaves. ``st["t"]`` is (P,) int32.
+
+    Exact rewrite of ``adam_step`` + the tau EMA: dividing m by (1-b1^t)
+    and v by (1-b2^t) is folded into lr_t/eps_t so no bias-corrected
+    tree is ever materialized."""
+    t = st["t"] + 1
+    tf = t.astype(jnp.float32)
+    c1 = 1.0 - b1 ** tf
+    c2 = 1.0 - b2 ** tf
+    lr_t = lr * jnp.sqrt(c2) / c1        # (P,)
+    eps_t = eps * jnp.sqrt(c2)           # (P,)
+
+    def upd(p, m, v, g, tg):
+        nd = (1,) * (p.ndim - 1)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        p2 = p - lr_t.reshape(-1, *nd) * m2 \
+            / (jnp.sqrt(v2) + eps_t.reshape(-1, *nd))
+        return (p2, m2, v2, (1 - tau) * tg + tau * p2)
+
+    out = jax.tree.map(upd, params, st["m"], st["v"], grads, target)
+    leaves, treedef = jax.tree.flatten(
+        out, is_leaf=lambda x: isinstance(x, tuple))
+    unf = lambda i: jax.tree.unflatten(treedef, [l[i] for l in leaves])
+    return unf(0), {"m": unf(1), "v": unf(2), "t": t}, unf(3)
+
+
+def _bmm(x, w):
+    """(P, B, i) @ (P, i, o): the population axis folded into the GEMM
+    batch dimension."""
+    return jnp.matmul(x, w)
+
+
+def _bwd_dw(h, dz):
+    """Weight cotangent (P, B, i),(P, B, o) -> (P, i, o)."""
+    return jnp.einsum("pbi,pbo->pio", h, dz)
+
+
+def _bwd_dx(dz, w):
+    """Input cotangent (P, B, o),(P, i, o) -> (P, B, i)."""
+    return jnp.einsum("pbo,pio->pbi", dz, w)
+
+
+def _mega_update_step(cfg: DDPGConfig, st: AgentState, batch):
+    """One population update step with every GEMM P-megabatched and a
+    hand-written backward. Semantics match ``update_step`` member-wise
+    (same reward-MA advance, frozen-norm standardization, critic-then-
+    actor Adam, Polyak) — the parity tests pin it at <= 1e-5."""
+    s, a, r, s2, done = batch            # (P, B, ...) / (P, B)
+    S = cfg.state_dim
+    bias = lambda l: l["b"][:, None, :]
+
+    batch_mean = jnp.mean(r, axis=1)     # (P,)
+    d = cfg.reward_ma_decay
+    ma = jnp.where(st.reward_ma_init > 0.0,
+                   d * st.reward_ma + (1.0 - d) * batch_mean, batch_mean)
+    r = r - ma[:, None]
+    inv = 1.0 / jnp.sqrt(st.norm_var + 1e-8)
+    s = (s - st.norm_mean[:, None, :]) * inv[:, None, :]
+    s2 = (s2 - st.norm_mean[:, None, :]) * inv[:, None, :]
+
+    TA, TC, CR, AC = st.target_actor, st.target_critic, st.critic, st.actor
+
+    # ---- q_target through the target nets (forward only, no grads) ----
+    x = jax.nn.relu(_bmm(s2, TA[0]["w"]) + bias(TA[0]))
+    x = jax.nn.relu(_bmm(x, TA[1]["w"]) + bias(TA[1]))
+    a2 = jax.nn.sigmoid(_bmm(x, TA[2]["w"]) + bias(TA[2]))
+    x = jnp.concatenate([s2, a2], -1)
+    x = jax.nn.relu(_bmm(x, TC[0]["w"]) + bias(TC[0]))
+    x = jax.nn.relu(_bmm(x, TC[1]["w"]) + bias(TC[1]))
+    q_next = (_bmm(x, TC[2]["w"]) + bias(TC[2]))[..., 0]
+    q_target = r + cfg.gamma * (1.0 - done) * q_next       # (P, B)
+
+    # ---- critic loss: forward + hand backward + fused Adam/Polyak ----
+    xc = jnp.concatenate([s, a], -1)
+    z1 = _bmm(xc, CR[0]["w"]) + bias(CR[0])
+    h1 = jax.nn.relu(z1)
+    z2 = _bmm(h1, CR[1]["w"]) + bias(CR[1])
+    h2 = jax.nn.relu(z2)
+    q = (_bmm(h2, CR[2]["w"]) + bias(CR[2]))[..., 0]
+    e = q - q_target
+    lc = jnp.mean(e * e, axis=1)                           # (P,)
+    dz3 = ((2.0 / e.shape[1]) * e)[..., None]              # d lc / d q
+    dW3 = _bwd_dw(h2, dz3)
+    db3 = jnp.sum(dz3, axis=1)
+    dz2 = _bwd_dx(dz3, CR[2]["w"]) * (z2 > 0)
+    dW2 = _bwd_dw(h1, dz2)
+    db2 = jnp.sum(dz2, axis=1)
+    dz1 = _bwd_dx(dz2, CR[1]["w"]) * (z1 > 0)
+    dW1 = _bwd_dw(xc, dz1)
+    db1 = jnp.sum(dz1, axis=1)
+    gc = [{"w": dW1, "b": db1}, {"w": dW2, "b": db2},
+          {"w": dW3, "b": db3}]
+    critic, opt_c, t_critic = _fused_adam_polyak(
+        CR, gc, st.opt_c, st.target_critic, cfg.critic_lr, cfg.tau)
+
+    # ---- actor loss against the UPDATED critic. The critic's first
+    # layer is split [s, pi] @ W1 = s @ W1[:S] + pi @ W1[S:], so the
+    # state half is a constant and the backward computes only the
+    # action-column input grads (d pi) ----
+    w1s = critic[0]["w"][:, :S, :]
+    w1a = critic[0]["w"][:, S:, :]
+    z1a = _bmm(s, AC[0]["w"]) + bias(AC[0])
+    h1a = jax.nn.relu(z1a)
+    z2a = _bmm(h1a, AC[1]["w"]) + bias(AC[1])
+    h2a = jax.nn.relu(z2a)
+    pi = jax.nn.sigmoid(_bmm(h2a, AC[2]["w"]) + bias(AC[2]))
+    zq1 = _bmm(s, w1s) + _bmm(pi, w1a) + bias(critic[0])
+    hq1 = jax.nn.relu(zq1)
+    zq2 = _bmm(hq1, critic[1]["w"]) + bias(critic[1])
+    hq2 = jax.nn.relu(zq2)
+    qpi = (_bmm(hq2, critic[2]["w"]) + bias(critic[2]))[..., 0]
+    la = -jnp.mean(qpi, axis=1)                            # (P,)
+    B = qpi.shape[1]
+    dz3q = jnp.full_like(hq2[..., :1], -1.0 / B)           # d la / d qpi
+    dzq2 = _bwd_dx(dz3q, critic[2]["w"]) * (zq2 > 0)
+    dzq1 = _bwd_dx(dzq2, critic[1]["w"]) * (zq1 > 0)
+    dpi = _bwd_dx(dzq1, w1a)
+    dz3a = dpi * pi * (1.0 - pi)
+    dA3 = _bwd_dw(h2a, dz3a)
+    db3a = jnp.sum(dz3a, axis=1)
+    dz2a = _bwd_dx(dz3a, AC[2]["w"]) * (z2a > 0)
+    dA2 = _bwd_dw(h1a, dz2a)
+    db2a = jnp.sum(dz2a, axis=1)
+    dz1a = _bwd_dx(dz2a, AC[1]["w"]) * (z1a > 0)
+    dA1 = _bwd_dw(s, dz1a)
+    db1a = jnp.sum(dz1a, axis=1)
+    ga = [{"w": dA1, "b": db1a}, {"w": dA2, "b": db2a},
+          {"w": dA3, "b": db3a}]
+    actor, opt_a, t_actor = _fused_adam_polyak(
+        AC, ga, st.opt_a, st.target_actor, cfg.actor_lr, cfg.tau)
+
+    st = st._replace(actor=actor, critic=critic, target_actor=t_actor,
+                     target_critic=t_critic, opt_a=opt_a, opt_c=opt_c,
+                     reward_ma=ma.astype(jnp.float32),
+                     reward_ma_init=jnp.ones_like(st.reward_ma_init))
+    return st, (lc, la)
+
+
+def _mega_chunk(cfg, states, replays, n):
+    # per-member key streams replicate chunk_sample_keys / the in-scan
+    # device_replay_sample draws of the vmap path exactly
+    carry, keys = jax.vmap(lambda k: chunk_sample_keys(k, n))(states.key)
+    states = states._replace(key=carry)
+    keys = jnp.swapaxes(keys, 0, 1)                       # (n, P, key)
+
+    def step(st, k):
+        batch = jax.vmap(device_replay_sample, in_axes=(0, 0, None))(
+            replays, k, cfg.batch_size)
+        return _mega_update_step(cfg, st, batch)
+
+    st, (lc, la) = jax.lax.scan(step, states, keys,
+                                unroll=min(_SCAN_UNROLL, n))
+    return st, (jnp.swapaxes(lc, 0, 1), jnp.swapaxes(la, 0, 1))
+
+
+@partial(jax.jit, static_argnums=(0, 3))
+def _population_update_chunk_mega_jit(cfg, states, replays, n):
+    return _mega_chunk(cfg, states, replays, n)
+
+
+@partial(jax.jit, static_argnums=(0, 3), donate_argnums=(1,))
+def _population_update_chunk_mega_donate_jit(cfg, states, replays, n):
+    return _mega_chunk(cfg, states, replays, n)
+
+
+def population_update_chunk_megabatched(cfg: DDPGConfig,
+                                        states: AgentState,
+                                        replays: DeviceReplayData, n: int,
+                                        donate: bool = False):
+    """The megabatched population chunk: ONE jit execution for the whole
+    population's ``n x P`` updates, parameters carried as (P, ...)
+    stacked buffers, every GEMM batched over P.
+
+    ``donate=True`` donates the stacked states so the parameter/moment
+    buffers update in place — callers must not reuse ``states`` after
+    the call (``PopulationSearch`` rebuilds them per dispatch)."""
+    fn = _population_update_chunk_mega_donate_jit if donate \
+        else _population_update_chunk_mega_jit
+    return fn(cfg, states, replays, n)
+
+
+def population_update_chunk(cfg: DDPGConfig, states: AgentState,
+                            replays: DeviceReplayData, n: int,
+                            donate: bool = False):
+    """Route a population update chunk: the megabatched path by default,
+    the ``jit(vmap(update_chunk))`` reference under
+    ``GALEN_POP_UPDATE=vmap`` (or for network shapes the hand-written
+    step does not cover — anything but the paper's 3-layer trunk).
+
+    Both paths return the same structure: the advanced stacked states
+    and per-member ``(P, n)`` critic/actor loss arrays, matching
+    member-wise to <= 1e-5 (tests/test_update_floor.py)."""
+    if os.environ.get("GALEN_POP_UPDATE") == "vmap" \
+            or len(cfg.hidden) != 2:
+        return population_update_chunk_vmap(cfg, states, replays, n)
+    return population_update_chunk_megabatched(cfg, states, replays, n,
+                                               donate=donate)
 
 
 def tree_stack(trees):

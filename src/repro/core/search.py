@@ -1191,8 +1191,10 @@ class PopulationSearch:
             states = tree_stack(
                 [m.agent.state_for_dispatch() for m in self.members])
             datas = tree_stack([m.replay.data for m in self.members])
+            # states are freshly stacked and never reused after the
+            # call, so the megabatched path may donate them in place
             new_states, _losses = population_update_chunk(
-                self.members[0].agent.cfg, states, datas, n)
+                self.members[0].agent.cfg, states, datas, n, donate=True)
             for i, m in enumerate(self.members):
                 m.agent.adopt_state(tree_index(new_states, i))
                 m._pending_updates = 0

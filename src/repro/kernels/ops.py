@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.kernels import fake_quant as _fq
 from repro.kernels import flash_attention as _fa
+from repro.kernels import mlp_fused as _mlp
 from repro.kernels import quant_matmul as _qm
 from repro.kernels import ref as _ref
 from repro.kernels import rglru_scan as _rg
@@ -66,6 +67,102 @@ def fused_fake_quant(x: jnp.ndarray, bits) -> jnp.ndarray:
     x2 = x.reshape(-1, shape[-1])
     out = _fq.fake_quant_2d(x2, bits, interpret=not _on_tpu())
     return out.reshape(shape)
+
+
+# --------------------------------------------------------------------------
+# Fused DDPG update-path kernels (ISSUE 7): 3-layer MLP forward + flat
+# Polyak. The forward runs in the Pallas kernel; gradients come from a
+# ``custom_vjp`` whose backward is the reference jnp chain (pallas_call has
+# no differentiation rule), so ``jax.grad`` through ``actor_forward`` /
+# ``critic_forward`` works unchanged when the kernel path is routed.
+# --------------------------------------------------------------------------
+
+_LANE = 128      # f32 lane multiple (last axis)
+_SUBLANE = 8     # f32 sublane multiple (second-to-last axis)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _mlp3_ste(sigmoid: bool, x, w1, b1, w2, b2, w3, b3):
+    y, _, _ = _mlp3_fwd_impl(sigmoid, x, w1, b1, w2, b2, w3, b3)
+    return y
+
+
+def _mlp3_fwd_impl(sigmoid, x, w1, b1, w2, b2, w3, b3):
+    """Pad to kernel-legal tiles, run the fused kernel, slice back.
+
+    Zero padding is exact here: padded x columns hit zero W rows, padded
+    b entries are zero, and relu(0)=0 keeps padded hidden columns zero —
+    see kernels.mlp_fused."""
+    B, D0 = x.shape
+    D1, D2, D3 = w1.shape[1], w2.shape[1], w3.shape[1]
+    xp = _pad_to(_pad_to(x, _SUBLANE, 0), _LANE, 1)
+    w1p = _pad_to(_pad_to(w1, _LANE, 0), _LANE, 1)
+    w2p = _pad_to(_pad_to(w2, _LANE, 0), _LANE, 1)
+    w3p = _pad_to(_pad_to(w3, _LANE, 0), _LANE, 1)
+    b1p = _pad_to(b1.reshape(1, -1), _LANE, 1)
+    b2p = _pad_to(b2.reshape(1, -1), _LANE, 1)
+    b3p = _pad_to(b3.reshape(1, -1), _LANE, 1)
+    y, h1, h2 = _mlp.mlp3(xp, w1p, b1p, w2p, b2p, w3p, b3p,
+                          sigmoid=sigmoid, interpret=not _on_tpu())
+    return y[:B, :D3], h1[:B, :D1], h2[:B, :D2]
+
+
+def _mlp3_vjp_fwd(sigmoid, x, w1, b1, w2, b2, w3, b3):
+    y, h1, h2 = _mlp3_fwd_impl(sigmoid, x, w1, b1, w2, b2, w3, b3)
+    return y, (x, w1, w2, w3, h1, h2, y)
+
+
+def _mlp3_vjp_bwd(sigmoid, res, dy):
+    # reference jnp backward (relu' = z > 0 == h > 0; sigmoid' = y(1-y))
+    x, w1, w2, w3, h1, h2, y = res
+    dz3 = dy * y * (1.0 - y) if sigmoid else dy
+    dw3 = h2.T @ dz3
+    db3 = jnp.sum(dz3, axis=0)
+    dz2 = (dz3 @ w3.T) * (h2 > 0)
+    dw2 = h1.T @ dz2
+    db2 = jnp.sum(dz2, axis=0)
+    dz1 = (dz2 @ w2.T) * (h1 > 0)
+    dw1 = x.T @ dz1
+    db1 = jnp.sum(dz1, axis=0)
+    dx = dz1 @ w1.T
+    return dx, dw1, db1, dw2, db2, dw3, db3
+
+
+_mlp3_ste.defvjp(_mlp3_vjp_fwd, _mlp3_vjp_bwd)
+
+
+def fused_mlp3(params, x, final: str = "linear") -> jnp.ndarray:
+    """Fused 3-layer MLP forward (one kernel, differentiable via the
+    reference backward). ``params`` is the ddpg ``_mlp`` layout — a list
+    of three ``{"w", "b"}`` layers; ``final`` is "linear" or "sigmoid"."""
+    (l1, l2, l3) = params
+    return _mlp3_ste(final == "sigmoid", x, l1["w"], l1["b"],
+                     l2["w"], l2["b"], l3["w"], l3["b"])
+
+
+def fused_polyak(target, online, tau):
+    """Soft-target update ``(1 - tau) * target + tau * online`` for an
+    arbitrary pytree: both trees are flattened into ONE [R, 128] buffer,
+    updated in a single kernel pass, and unflattened — instead of one
+    dispatch per parameter leaf."""
+    t_leaves, treedef = jax.tree.flatten(target)
+    p_leaves = treedef.flatten_up_to(online)
+    sizes = [l.size for l in t_leaves]
+    flat_t = jnp.concatenate([l.reshape(-1) for l in t_leaves])
+    flat_p = jnp.concatenate([l.reshape(-1) for l in p_leaves])
+    n = flat_t.shape[0]
+    pad = (-n) % _LANE
+    if pad:
+        flat_t = jnp.pad(flat_t, (0, pad))
+        flat_p = jnp.pad(flat_p, (0, pad))
+    out = _mlp.polyak_flat(flat_t.reshape(-1, _LANE),
+                           flat_p.reshape(-1, _LANE), tau,
+                           interpret=not _on_tpu()).reshape(-1)[:n]
+    offs, news = 0, []
+    for leaf, size in zip(t_leaves, sizes):
+        news.append(out[offs:offs + size].reshape(leaf.shape))
+        offs += size
+    return jax.tree.unflatten(treedef, news)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window"))

@@ -245,3 +245,98 @@ def test_ssd_matches_model_path():
                                rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(f_model), np.asarray(f_kern),
                                rtol=2e-4, atol=2e-4)
+
+
+# ----------------------- fused MLP3 + flat Polyak ---------------------------
+
+def _mlp_params(key, dims):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": jax.random.normal(k, (a, b)) / jnp.sqrt(a),
+             "b": jax.random.normal(jax.random.fold_in(k, 1), (b,)) * 0.1}
+            for k, (a, b) in zip(ks, zip(dims[:-1], dims[1:]))]
+
+
+def _mlp_ref(params, x, sigmoid):
+    h = x
+    for i, l in enumerate(params):
+        h = h @ l["w"] + l["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return jax.nn.sigmoid(h) if sigmoid else h
+
+
+@pytest.mark.parametrize("B,dims,final", [
+    (16, (10, 400, 300, 6), "sigmoid"),     # paper actor trunk
+    (16, (16, 400, 300, 1), "linear"),      # paper critic trunk
+    (33, (7, 50, 30, 5), "sigmoid"),        # odd dims exercise padding
+    (8, (128, 128, 128, 128), "linear"),    # exactly lane-aligned
+])
+def test_fused_mlp3_forward_matches_ref(B, dims, final):
+    params = _mlp_params(jax.random.PRNGKey(B), dims)
+    x = jax.random.normal(jax.random.PRNGKey(B + 1), (B, dims[0]))
+    y = ops.fused_mlp3(params, x, final=final)
+    yr = _mlp_ref(params, x, final == "sigmoid")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("final", ["linear", "sigmoid"])
+def test_fused_mlp3_backward_matches_ref(final):
+    dims = (9, 40, 30, 3)
+    params = _mlp_params(jax.random.PRNGKey(7), dims)
+    x = jax.random.normal(jax.random.PRNGKey(8), (24, dims[0]))
+
+    def loss_k(p, x):
+        return jnp.sum(ops.fused_mlp3(p, x, final=final) ** 2)
+
+    def loss_r(p, x):
+        return jnp.sum(_mlp_ref(p, x, final == "sigmoid") ** 2)
+
+    gk = jax.grad(loss_k, argnums=(0, 1))(params, x)
+    gr = jax.grad(loss_r, argnums=(0, 1))(params, x)
+    for a, b in zip(jax.tree.leaves(gk), jax.tree.leaves(gr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_fused_mlp3_under_jit_and_vmap():
+    dims = (6, 32, 24, 4)
+    params = _mlp_params(jax.random.PRNGKey(9), dims)
+    x = jax.random.normal(jax.random.PRNGKey(10), (16, dims[0]))
+    y = jax.jit(lambda p, x: ops.fused_mlp3(p, x, final="sigmoid"))(
+        params, x)
+    yr = _mlp_ref(params, x, True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("sizes", [
+    [(400, 300), (300,), (300, 1)],     # lane-unaligned leaves
+    [(7,), (13, 5)],                    # total size not a lane multiple
+    [(256, 128)],                       # exactly aligned
+])
+def test_fused_polyak_matches_tree_map(sizes):
+    keys = jax.random.split(jax.random.PRNGKey(11), 2 * len(sizes))
+    target = [jax.random.normal(keys[2 * i], s)
+              for i, s in enumerate(sizes)]
+    online = [jax.random.normal(keys[2 * i + 1], s)
+              for i, s in enumerate(sizes)]
+    tau = 0.01
+    out = ops.fused_polyak(target, online, tau)
+    ref_out = jax.tree.map(lambda t, p: (1 - tau) * t + tau * p,
+                           target, online)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref_out)):
+        assert a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_fused_polyak_nested_tree():
+    """Dict-of-list params (the ddpg layout) survive the flatten trip."""
+    target = [{"w": jnp.ones((5, 3)), "b": jnp.zeros((3,))},
+              {"w": jnp.full((3, 2), 2.0), "b": jnp.ones((2,))}]
+    online = jax.tree.map(lambda x: x + 1.0, target)
+    out = ops.fused_polyak(target, online, 0.5)
+    ref_out = jax.tree.map(lambda t, p: 0.5 * t + 0.5 * p, target, online)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref_out)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
