@@ -15,6 +15,9 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
+import textwrap
 import time
 from contextlib import contextmanager
 
@@ -356,6 +359,94 @@ def assert_epoch_dispatch_count(search, first_episode: int,
         f"epoch made {counts['epoch']} epoch executions " \
         f"(uncached schedule?): {counts}"
     assert search.dispatch_log == ["epoch"], search.dispatch_log
+    return counts
+
+
+@contextmanager
+def population_epoch_dispatch_probe(pop):
+    """Shared-epoch compile-counter hook for ``PopulationSearch`` /
+    ``FleetSearch``: counts REAL invocations of the population's compiled
+    epoch executables (wrapping the callables in ``_pop_epoch_cache``)
+    and plants canaries on every fallback — the members' own epoch
+    caches (the per-member decomposition), the per-batch fused entry
+    points, and the numpy host path. One population epoch must execute
+    the shared program exactly once and touch nothing else, mesh-sharded
+    or not."""
+    import repro.core.ddpg as ddpg_mod
+    import repro.core.replay as replay_mod
+    import repro.core.search as search_mod
+    counts = {"pop_epoch": 0, "member_epoch": 0, "rollout": 0,
+              "validate": 0, "push": 0, "update": 0, "host_steps": 0}
+    saved = []
+
+    def wrap(obj, name, key):
+        fn = getattr(obj, name)
+        saved.append((obj, name, name in vars(obj), fn))
+
+        def counting(*a, **kw):
+            counts[key] += 1
+            return fn(*a, **kw)
+
+        setattr(obj, name, counting)
+
+    def wrap_cache(cache, key):
+        before = dict(cache)
+        for k, (params, fn) in before.items():
+            def make(fn):
+                def counting(*a, **kw):
+                    counts[key] += 1
+                    return fn(*a, **kw)
+                return counting
+            cache[k] = (params, make(fn))
+        return before
+
+    pop_saved = wrap_cache(pop._pop_epoch_cache, "pop_epoch")
+    member_saved = [(m, wrap_cache(m._epoch_cache, "member_epoch"))
+                    for m in pop.members]
+    m0 = pop.members[0]
+    wrap(m0, "_rollout", "rollout")
+    wrap(m0.cmodel, "accuracy_policy_batch", "validate")
+    wrap(replay_mod, "_device_push", "push")
+    wrap(ddpg_mod, "_update_chunk_jit", "update")
+    wrap(m0.agent, "act_batch", "host_steps")
+    wrap(search_mod, "policy_latency_batch", "host_steps")
+    try:
+        yield counts
+    finally:
+        for obj, name, was_own, fn in reversed(saved):
+            if was_own:
+                setattr(obj, name, fn)
+            else:
+                delattr(obj, name)
+        pop._pop_epoch_cache.update(pop_saved)
+        for m, cs in member_saved:
+            m._epoch_cache.update(cs)
+
+
+def assert_population_epoch_dispatch_count(pop, first_episode: int,
+                                           n_batches: int) -> dict:
+    """One post-compile population epoch must be ONE execution of the
+    shared vmapped epoch executable — never the per-member epoch
+    decomposition, the per-batch entry points, or the host path — and
+    every member's dispatch_log must record the one shared dispatch.
+    Holds identically for the mesh-sharded ``FleetSearch`` (the sharded
+    program is the same cached executable compiled for sharded
+    operands). Runs in the fleet tests and the weekly job."""
+    for m in pop.members:
+        m.dispatch_log.clear()
+    with population_epoch_dispatch_probe(pop) as counts:
+        pop.run_epoch(first_episode, n_batches)
+    assert counts["host_steps"] == 0, \
+        f"host path ran under the population epoch: {counts}"
+    per_batch = sum(counts[k] for k in ("rollout", "validate", "push",
+                                        "update"))
+    assert per_batch == 0 and counts["member_epoch"] == 0, \
+        f"population epoch fell back off the shared dispatch: {counts}"
+    assert counts["pop_epoch"] == 1, \
+        f"population epoch made {counts['pop_epoch']} shared executions " \
+        f"(uncached schedule?): {counts}"
+    for m in pop.members:
+        assert m.dispatch_log == ["epoch"], m.dispatch_log
     return counts
 
 
@@ -726,6 +817,92 @@ def update_floor_comparison(pops=(1, 4, 16), updates: int = 8,
 
 
 # ===========================================================================
+# Fleet scaling: mesh-sharded population epochs, 1 vs 4 devices (ISSUE 8)
+# ===========================================================================
+
+FLEET_SCALING_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import json
+    import time
+    import jax
+    from benchmarks.search_setup import \\
+        assert_population_epoch_dispatch_count
+    from repro.launch.fleet import tiny_fleet
+
+    P, E, EPISODES, REPS = 4, 2, 16, 5
+    arms = {
+        "fleet_1dev": tiny_fleet(members=P, data=0, updates=2, seed0=0),
+        "fleet_4dev": tiny_fleet(members=P, data=4, updates=2, seed0=0),
+    }
+    # warm: the first chunk straddles the agent's warmup boundary, so
+    # both the warmup-straddling and the steady epoch schedules compile
+    # here, outside the timed region
+    for f in arms.values():
+        f.run_fleet(f.epoch_cursor + EPISODES)
+    best = {n: 0.0 for n in arms}
+    for _ in range(REPS):
+        for n, f in arms.items():
+            t0 = time.perf_counter()
+            f.run_fleet(f.epoch_cursor + EPISODES)
+            best[n] = max(best[n],
+                          P * EPISODES / (time.perf_counter() - t0))
+    probe = assert_population_epoch_dispatch_count(
+        arms["fleet_4dev"], arms["fleet_4dev"].epoch_cursor, E)
+    print(json.dumps({"eps": best, "devices": len(jax.devices()),
+                      "pop_epoch": probe["pop_epoch"]}))
+""")
+
+
+def fleet_scaling_rows(verbose: bool = True) -> list:
+    """Aggregate eps/s of a P=4 ``FleetSearch`` (updates>0) with the
+    same workload pinned to one device vs sharded over a 4-device mesh,
+    best-of-5 interleaved round-robin. Runs in a FRESH subprocess — the
+    CPU device count locks at first jax init, so the forced-host-device
+    recipe cannot run in the benchmark process itself.
+
+    Honest-measurement note (the PR 7 precedent): on this 1-core CI box
+    every forced host device shares the same core, so the 4-device arm
+    measures ~1x the 1-device arm — the sharded program's win needs
+    genuinely parallel devices. The rows pin the sharded dispatch path
+    (the probe asserts the 1-execution bound) and its eps/s against
+    regression; the >=2x multiple lives on real multi-device backends.
+    """
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + root
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", FLEET_SCALING_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=1800, cwd=root)
+    if res.returncode != 0:
+        raise RuntimeError(
+            f"fleet_scaling subprocess failed:\n{res.stderr[-3000:]}")
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    rows = []
+    for name, devices in (("fleet_1dev", 1), ("fleet_4dev", 4)):
+        row = {"table": "fleet_scaling", "engine": name, "members": 4,
+               "batch_size": 4, "updates_per_episode": 2,
+               "devices": devices,
+               "eps_per_s": round(out["eps"][name], 2)}
+        if name == "fleet_4dev":
+            row["dispatches_per_epoch"] = out["pop_epoch"]
+            row["speedup_vs_1dev"] = round(
+                out["eps"]["fleet_4dev"] / out["eps"]["fleet_1dev"], 2)
+        rows.append(row)
+    if verbose:
+        print(f"[fleet_scaling] P=4 K=4 updates=2: "
+              f"1dev {out['eps']['fleet_1dev']:.1f} eps/s, "
+              f"4dev {out['eps']['fleet_4dev']:.1f} eps/s -> "
+              f"{out['eps']['fleet_4dev'] / out['eps']['fleet_1dev']:.2f}x "
+              f"(forced host devices share this box's single core)",
+              flush=True)
+    return rows
+
+
+# ===========================================================================
 # Serving throughput of the deployed compressed model (ISSUE 7)
 # ===========================================================================
 
@@ -771,7 +948,8 @@ def main(out: str = "artifacts/bench_engine.json"):
             + [calibrated_fused_row(), population_comparison()]
             + sensitivity_comparison()
             + update_floor_comparison()
-            + serve_throughput_rows())
+            + serve_throughput_rows()
+            + fleet_scaling_rows())
     os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
         json.dump(rows, f, indent=1)

@@ -108,12 +108,48 @@ class AsyncCheckpointer:
             self._thread = None
 
 
+def save_async(checkpointer: AsyncCheckpointer, step: int, tree: Any,
+               extra: Optional[dict] = None) -> None:
+    """Atomic async save through a long-lived ``AsyncCheckpointer`` — the
+    fleet drivers' entry point: snapshot now, write in the background, the
+    previous checkpoint stays intact until the new LATEST pointer lands."""
+    checkpointer.save(step, tree, extra)
+
+
+def _intact_steps(directory: str) -> list[int]:
+    """Steps whose dir holds a readable manifest (i.e. fully committed)."""
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for d in os.listdir(directory):
+        if not d.startswith("step_"):
+            continue
+        try:
+            step = int(d.split("_", 1)[1])
+        except ValueError:
+            continue
+        if os.path.exists(os.path.join(directory, d, "manifest.json")):
+            steps.append(step)
+    return sorted(steps)
+
+
 def latest_step(directory: str) -> Optional[int]:
+    """Step the LATEST pointer names — or, when the pointer is missing,
+    unreadable, or DANGLING (a crash between step-dir GC and the pointer
+    rewrite leaves it naming a deleted dir), the newest step with an intact
+    manifest. Returns None when no intact checkpoint exists."""
     ptr = os.path.join(directory, "LATEST")
-    if not os.path.exists(ptr):
-        return None
-    with open(ptr) as f:
-        return int(f.read().strip())
+    if os.path.exists(ptr):
+        try:
+            with open(ptr) as f:
+                step = int(f.read().strip())
+        except ValueError:
+            step = None
+        if step is not None and os.path.exists(
+                os.path.join(directory, f"step_{step}", "manifest.json")):
+            return step
+    steps = _intact_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore(directory: str, step: int, like: Any,

@@ -635,9 +635,21 @@ def population_update_chunk(cfg: DDPGConfig, states: AgentState,
                                                donate=donate)
 
 
-def tree_stack(trees):
-    """Stack a list of identically-shaped pytrees along a new axis 0."""
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+def tree_stack(trees, shardings=None):
+    """Stack a list of identically-shaped pytrees along a new axis 0.
+
+    ``shardings`` (a pytree of ``NamedSharding`` matching the STACKED
+    result, e.g. ``distributed.sharding.population_shardings``) commits the
+    stack to a device mesh along the member axis. jit follows committed
+    input placements, so a subsequent donated population dispatch
+    (``population_update_chunk(..., donate=True)`` or the fused epoch
+    program) then partitions one member per device and updates the sharded
+    buffers in place — the mesh-sharded fleet path costs no extra copies
+    over the single-device one."""
+    out = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    if shardings is not None:
+        out = jax.device_put(out, shardings)
+    return out
 
 
 def tree_index(tree, i: int):

@@ -220,6 +220,15 @@ class DeviceReplay:
         self.ptr = int((self.ptr + pushed) % self.capacity)
         self.size = int(min(self.size + pushed, self.capacity))
 
+    def load(self, data: DeviceReplayData, ptr: int, size: int):
+        """Adopt a RESTORED ring (checkpoint resume): contents come from the
+        checkpoint tree, host ptr/size mirrors from the manifest — resuming
+        preserves both the sampleable prefix and the next write slot, so the
+        update schedule and ring writes continue bit-exact."""
+        self.data = data
+        self.ptr = int(ptr) % self.capacity
+        self.size = min(int(size), self.capacity)
+
     def sample(self, batch: int):
         """Host-visible uniform sample (compat path + determinism tests).
 

@@ -105,12 +105,19 @@ semantics, property-tested in ``tests/test_agent_core.py``.
 from __future__ import annotations
 
 import copy
+import time
 from dataclasses import dataclass, field
 from typing import List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.checkpoint.checkpointing import (AsyncCheckpointer, restore_latest,
+                                            save_async)
+from repro.distributed.fault_tolerance import (FaultToleranceConfig,
+                                               StepMonitor)
+from repro.distributed.sharding import pad_members, population_shardings
 
 from repro.core.constraints import legal_tables
 from repro.core.ddpg import (_SCAN_UNROLL as _UPDATE_SCAN_UNROLL,
@@ -1037,6 +1044,14 @@ class PopulationSearch:
         self._pop_epoch_cache: dict = {}
         self._epoch_fusable = None
 
+    def _stack_for_dispatch(self, trees):
+        """Stack per-member pytrees (arg tuples, agent states, rings)
+        along a new leading member axis for a shared dispatch.
+        ``FleetSearch`` overrides this to pad the member axis up to the
+        mesh ``data`` extent and commit the stack to the mesh, which
+        makes every shared dispatch run one member per device."""
+        return tree_stack(trees)
+
     def _rollouts_fusable(self) -> bool:
         """One vmapped rollout needs one traced step function: same spec
         list (identity — the oracle/legal/static tables bake into the
@@ -1062,7 +1077,7 @@ class PopulationSearch:
         """All members' rollouts as ONE vmapped dispatch, then the
         per-member validation/replay/record tail."""
         args = [m._rollout_args(first_episode, k) for m in self.members]
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *args)
+        stacked = self._stack_for_dispatch(args)
         if self._pop_rollout is None:
             self._pop_rollout = jax.jit(
                 jax.vmap(self.members[0]._rollout_fn))
@@ -1117,7 +1132,7 @@ class PopulationSearch:
                              donate_argnums=(0, 1))))
         args = [m._epoch_args(first_episode, n_batches)
                 for m in self.members]
-        outs = hit[1](*jax.tree.map(lambda *xs: jnp.stack(xs), *args))
+        outs = hit[1](*self._stack_for_dispatch(args))
         res = []
         for i, m in enumerate(self.members):
             m.dispatch_log.append("epoch")   # ONE shared dispatch
@@ -1188,9 +1203,10 @@ class PopulationSearch:
                     for m in self.members)
         if len(set(ns)) == 1 and ns[0] > 0 and ready:
             n = ns[0]
-            states = tree_stack(
+            states = self._stack_for_dispatch(
                 [m.agent.state_for_dispatch() for m in self.members])
-            datas = tree_stack([m.replay.data for m in self.members])
+            datas = self._stack_for_dispatch(
+                [m.replay.data for m in self.members])
             # states are freshly stacked and never reused after the
             # call, so the megabatched path may donate them in place
             new_states, _losses = population_update_chunk(
@@ -1203,3 +1219,200 @@ class PopulationSearch:
         else:
             for m in self.members:
                 m._flush_updates()
+
+
+class FleetSearch(PopulationSearch):
+    """Mesh-sharded population search with preemption-safe epoch
+    checkpoints — the "search-as-a-service" driver.
+
+    ``PopulationSearch`` already runs the whole population's epoch as ONE
+    ``jit(vmap(epoch))`` over stacked per-member carries, but the stack
+    lives on one device, so P members time-slice it. ``FleetSearch``
+    commits every stacked dispatch operand to a device mesh with
+    ``NamedSharding(mesh, P("data"))`` along the member axis
+    (``_stack_for_dispatch``): the SAME program then executes one member
+    per device (members beyond the ``data`` extent round-robin; the stack
+    is padded up to a multiple of it by repeating the last member, whose
+    extra outputs are discarded). Per-member math never mixes member
+    rows, so the partitioned program contains no collectives.
+
+    Preemption safety: every ``ckpt_every`` completed epochs the stacked
+    carry — ``AgentState``, ``DeviceReplay`` ring, rollout PRNG key per
+    member — is checkpointed through the atomic async writer
+    (``checkpoint.checkpointing.save_async``); the manifest records the
+    mesh shape, the epoch cursor, per-member seeds/methods, and the ring
+    ptr/size mirrors. ``restore_latest_checkpoint`` re-shards the carry
+    onto the *current* mesh — including a smaller one after device loss
+    (``fault_tolerance.elastic_data_axis`` picks the data extent the
+    survivors support) — and the next ``run_fleet`` call resumes from the
+    restored cursor. On the same mesh the resume is bit-exact: the carry
+    holds every PRNG stream and the update schedule is a pure function of
+    (episode cursor, restored ring size). A ``StepMonitor`` times each
+    epoch dispatch and flags stragglers (``monitor.summary()``).
+
+    ``mesh=None`` degrades to plain single-device ``PopulationSearch``
+    dispatch while keeping the checkpoint/resume machinery — the fleet
+    semantics are mesh-size independent by construction.
+    """
+
+    def __init__(self, members: Sequence[CompressionSearch], mesh=None,
+                 fuse_rollouts: bool = True, ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 1, keep: int = 3,
+                 ft_cfg: Optional[FaultToleranceConfig] = None):
+        super().__init__(members, fuse_rollouts=fuse_rollouts)
+        for m in self.members:
+            if getattr(m, "epoch_batches", 0) <= 0:
+                raise ValueError(
+                    "FleetSearch members must be FusedCompressionSearch "
+                    "in epoch mode (epoch_batches > 0)")
+        if not self._epochs_fusable():
+            raise ValueError(
+                "FleetSearch members must share one epoch trace (same "
+                "specs/sensitivity/context/methods/model/reward — vary "
+                "seeds or hardware targets instead)")
+        if mesh is not None and "data" not in mesh.axis_names:
+            raise ValueError(
+                f"FleetSearch mesh needs a 'data' axis to shard the "
+                f"member dimension; got axes {mesh.axis_names}")
+        self.mesh = mesh
+        self.monitor = StepMonitor(ft_cfg or FaultToleranceConfig())
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = max(1, int(ckpt_every))
+        self._ckpt = AsyncCheckpointer(ckpt_dir, keep=keep) \
+            if ckpt_dir else None
+        self.epoch_cursor = 0      # episodes completed (per member)
+        self.epochs_run = 0        # epoch dispatches completed
+
+    # ------------------------------------------------------ mesh placement
+    def _stack_for_dispatch(self, trees):
+        if self.mesh is None:
+            return tree_stack(trees)
+        stacked = tree_stack(pad_members(list(trees),
+                                         self.mesh.shape["data"]))
+        return jax.device_put(stacked,
+                              population_shardings(stacked, self.mesh))
+
+    # ------------------------------------------------------- checkpointing
+    def _fleet_carry(self) -> dict:
+        """The checkpointable stacked epoch carry. ``state_for_dispatch``
+        folds the host-side norm/reward-MA mirrors into the pytree first,
+        so the checkpoint is self-contained."""
+        return {
+            "agent": tree_stack([m.agent.state_for_dispatch()
+                                 for m in self.members]),
+            "ring": tree_stack([m.replay.data for m in self.members]),
+            "rollout_key": jnp.stack([m._rollout_key
+                                      for m in self.members]),
+        }
+
+    def _manifest_extra(self) -> dict:
+        return {
+            "epoch_cursor": int(self.epoch_cursor),
+            "epochs_run": int(self.epochs_run),
+            "mesh_shape": dict(self.mesh.shape)
+            if self.mesh is not None else None,
+            "member_seeds": [int(m.cfg.seed) for m in self.members],
+            "member_methods": [m.cfg.methods for m in self.members],
+            "ring_ptr": [int(m.replay.ptr) for m in self.members],
+            "ring_size": [int(m.replay.size) for m in self.members],
+            "monitor": self.monitor.summary(),
+        }
+
+    def save_checkpoint(self, wait: bool = False):
+        """Atomic async save of the stacked carry (one step per completed
+        epoch). The snapshot happens now; the write runs in the
+        background and the previous checkpoint stays intact until the new
+        LATEST pointer lands."""
+        if self._ckpt is None:
+            raise ValueError("FleetSearch was built without ckpt_dir")
+        save_async(self._ckpt, self.epochs_run, self._fleet_carry(),
+                   self._manifest_extra())
+        if wait:
+            self._ckpt.wait()
+
+    def restore_latest_checkpoint(self, directory: Optional[str] = None):
+        """Restore the newest intact checkpoint and re-shard the carry
+        onto the CURRENT mesh (which may be smaller than the one that
+        saved it — elastic resume). Returns the manifest extra, or None
+        when no checkpoint exists. On the same mesh shape the subsequent
+        ``run_fleet`` continuation is bit-exact."""
+        directory = directory or self.ckpt_dir
+        if directory is None:
+            raise ValueError("no checkpoint directory given")
+        like = self._fleet_carry()
+        shardings = None
+        if self.mesh is not None and \
+                len(self.members) % self.mesh.shape["data"] == 0:
+            # direct re-shard; a non-dividing member count is placed by
+            # the next _stack_for_dispatch (which pads) instead
+            shardings = population_shardings(like, self.mesh)
+        tree, step, extra = restore_latest(directory, like, shardings)
+        if tree is None:
+            return None
+        P = len(self.members)
+        if len(extra.get("member_seeds", [])) != P:
+            raise ValueError(
+                f"checkpoint holds {len(extra.get('member_seeds', []))} "
+                f"members, fleet has {P}")
+        for i, m in enumerate(self.members):
+            st = tree_index(tree["agent"], i)
+            m.agent.adopt_state(st)
+            norm = jax.device_get((st.norm_count, st.norm_mean,
+                                   st.norm_var))
+            m.agent.norm.count = float(norm[0])
+            m.agent.norm.mean = np.asarray(norm[1], np.float32)
+            m.agent.norm.var = np.asarray(norm[2], np.float32)
+            m.replay.load(tree_index(tree["ring"], i),
+                          extra["ring_ptr"][i], extra["ring_size"][i])
+            m._rollout_key = tree["rollout_key"][i]
+        self.epoch_cursor = int(extra["epoch_cursor"])
+        self.epochs_run = int(extra["epochs_run"])
+        return extra
+
+    # --------------------------------------------------------- fleet loop
+    def run_fleet(self, episodes: int,
+                  verbose: bool = False) -> List[SearchResult]:
+        """Run whole fleet epochs from ``self.epoch_cursor`` (0, or the
+        restored checkpoint's cursor) until ``episodes`` total episodes
+        per member, checkpointing every ``ckpt_every`` epochs. Histories
+        cover only the episodes run by THIS call — a resumed fleet
+        returns the post-restore tail, which is what resume parity tests
+        compare."""
+        K = self.members[0].batch_size
+        E = self.members[0].epoch_batches
+        if episodes % K:
+            raise ValueError(
+                f"episodes ({episodes}) must be a multiple of the "
+                f"episode batch size ({K}) — fleets run whole batches")
+        histories = [[] for _ in self.members]
+        bests: List[Optional[EpisodeRecord]] = [None] * len(self.members)
+        while self.epoch_cursor < episodes:
+            nb = min(E, (episodes - self.epoch_cursor) // K)
+            t0 = time.perf_counter()
+            # run_epoch ends with the epoch's single blocking host
+            # readback, so this wall time covers the full dispatch
+            chunks = self.run_epoch(self.epoch_cursor, nb)
+            self.epochs_run += 1
+            self.monitor.record(self.epochs_run,
+                                time.perf_counter() - t0)
+            self.epoch_cursor += nb * K
+            for i, recs in enumerate(chunks):
+                for rec in recs:
+                    histories[i].append(rec)
+                    if bests[i] is None or rec.reward > bests[i].reward:
+                        bests[i] = rec
+            if self._ckpt is not None and \
+                    self.epochs_run % self.ckpt_every == 0:
+                self.save_checkpoint()
+            if verbose:
+                row = " ".join(
+                    f"{m.cfg.methods}:{histories[i][-1].reward:+.3f}"
+                    for i, m in enumerate(self.members))
+                print(f"  epoch {self.epochs_run:4d} "
+                      f"ep {self.epoch_cursor:5d} rewards [{row}]")
+        if self._ckpt is not None:
+            self._ckpt.wait()
+        return [SearchResult(history=histories[i], best=bests[i],
+                             ref_latency_s=m.ref_lat.total_s,
+                             ref_accuracy=m.ref_acc)
+                for i, m in enumerate(self.members)]

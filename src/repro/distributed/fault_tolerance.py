@@ -44,8 +44,10 @@ class StepMonitor:
         self.times: collections.deque = collections.deque(
             maxlen=cfg.straggler_window)
         self.stragglers: List[int] = []
+        self.total_recorded = 0
 
     def record(self, step: int, dt: float):
+        self.total_recorded += 1
         if len(self.times) >= 8:
             med = sorted(self.times)[len(self.times) // 2]
             if dt > self.cfg.straggler_factor * med:
@@ -59,6 +61,13 @@ class StepMonitor:
         if not self.times:
             return 0.0
         return sorted(self.times)[len(self.times) // 2]
+
+    def summary(self) -> dict:
+        """JSON-able digest for fleet logs/manifests: epochs recorded, the
+        trailing median, and which epochs were flagged as stragglers."""
+        return {"recorded": self.total_recorded,
+                "median_step_s": self.median_step_s,
+                "stragglers": list(self.stragglers)}
 
 
 class HealthLedger:

@@ -277,6 +277,50 @@ def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
 
 
+# ---------------------------------------------------------------------------
+# Member-axis rules (population search fleets).
+#
+# A PopulationSearch dispatch stacks every member's epoch carry (AgentState,
+# DeviceReplay ring, rollout PRNG key, ...) along a new leading MEMBER axis
+# and runs jit(vmap(epoch)). Placing those stacks with P("data") along the
+# member axis makes the same program execute one member per mesh device
+# (members beyond the data extent round-robin). Per-member math never mixes
+# rows, so no collectives are introduced — the partitioner slices the batch.
+# ---------------------------------------------------------------------------
+
+
+def member_sharding(mesh: Mesh, ndim: int):
+    """Shard the leading (member) axis over ``data``; rest replicated."""
+    if ndim == 0:
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, P("data", *([None] * (ndim - 1))))
+
+
+def population_shardings(tree, mesh: Mesh):
+    """Member-axis NamedSharding pytree matching a STACKED population tree
+    (every leaf's dim 0 is the member axis). Works on ShapeDtypeStructs.
+    Leaves whose member dim does not divide the mesh ``data`` extent are
+    replicated instead (callers normally pad the stack first — see
+    ``pad_members``)."""
+    data = mesh.shape["data"]
+
+    def leaf(x):
+        nd = jnp.ndim(x)
+        if nd == 0 or (jnp.shape(x)[0] % data) != 0:
+            return NamedSharding(mesh, P(*([None] * nd)))
+        return member_sharding(mesh, nd)
+
+    return jax.tree.map(leaf, tree)
+
+
+def pad_members(trees: list, data: int) -> list:
+    """Pad a list of per-member pytrees up to a multiple of the mesh data
+    extent by repeating the last member (its outputs are discarded), so the
+    stacked member axis divides evenly across devices."""
+    pad = (-len(trees)) % data
+    return list(trees) + list(trees[-1:]) * pad
+
+
 def batch_sharding(mesh: Mesh, ndim: int = 2, batch_size: int = 0):
     """Inputs: batch over (pod, data); rest unsharded. If ``batch_size`` is
     given, mesh axes that do not divide it are dropped (e.g. batch=1

@@ -23,5 +23,20 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_dev_mesh(data: int = 1, model: int = 1):
-    """Small mesh for tests (requires >= data*model local devices)."""
+    """Small mesh for tests and fleets (requires >= data*model local devices).
+
+    Raises a ``ValueError`` naming the required device count when the host
+    has too few — ``jax.make_mesh`` otherwise fails with an opaque reshape
+    error deep inside device assignment.
+    """
+    need = data * model
+    have = len(jax.devices())
+    if have < need:
+        raise ValueError(
+            f"make_dev_mesh(data={data}, model={model}) needs {need} local "
+            f"device(s) but only {have} are visible. On CPU, launch a fresh "
+            f"process with XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{need} (must be set before jax initializes), or shrink the "
+            "mesh — e.g. distributed.fault_tolerance.elastic_data_axis "
+            "picks the largest data axis the surviving devices support.")
     return jax.make_mesh((data, model), ("data", "model"))

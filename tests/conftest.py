@@ -16,6 +16,21 @@ import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 
+def require_devices(n: int):
+    """Skip (with the forced-host-device recipe in the reason) when the
+    current process has fewer than ``n`` local devices. Mesh-size-gated
+    tests call this first: they skip in the ordinary 1-device suite and
+    run in CI's dedicated multi-device step, which launches a fresh
+    pytest process under ``XLA_FLAGS=--xla_force_host_platform_device_
+    count=8`` (the flag only works before jax first initializes)."""
+    have = len(jax.devices())
+    if have < n:
+        pytest.skip(
+            f"needs {n} local devices, this process has {have}; run in a "
+            f"fresh process under XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={n}")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

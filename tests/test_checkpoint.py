@@ -57,6 +57,35 @@ def test_restore_missing_returns_none(tmp_path):
     assert out is None and step is None
 
 
+def test_dangling_latest_falls_back_to_newest_intact(tmp_path):
+    """A crash between step-dir GC and the pointer rewrite leaves LATEST
+    naming a deleted step; restore must fall back to the newest intact
+    manifest instead of raising."""
+    import shutil
+    t = tree()
+    C.save(str(tmp_path), 5, t, extra={"mark": 5})
+    C.save(str(tmp_path), 9, t, extra={"mark": 9})
+    # simulate the crash: GC removed step_9's predecessor-pointer target
+    with open(tmp_path / "LATEST", "w") as f:
+        f.write("12")                     # names a step that never landed
+    assert C.latest_step(str(tmp_path)) == 9
+    restored, step, extra = C.restore_latest(str(tmp_path), t)
+    assert step == 9 and extra["mark"] == 9
+    # pointer names a GC'd dir
+    shutil.rmtree(tmp_path / "step_9")
+    with open(tmp_path / "LATEST", "w") as f:
+        f.write("9")
+    restored, step, extra = C.restore_latest(str(tmp_path), t)
+    assert step == 5 and extra["mark"] == 5
+    # unparsable pointer content
+    with open(tmp_path / "LATEST", "w") as f:
+        f.write("garbage")
+    assert C.latest_step(str(tmp_path)) == 5
+    # a step dir without a manifest (crash mid-rename) is never chosen
+    os.makedirs(tmp_path / "step_7")
+    assert C.latest_step(str(tmp_path)) == 5
+
+
 def test_trainer_resume(tmp_path):
     """Trainer checkpoints and resumes at the right step (restart safety)."""
     from repro.configs.base import ArchConfig
